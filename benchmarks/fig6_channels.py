@@ -1,0 +1,21 @@
+"""Paper Fig. 6: accelerator-level energy efficiency vs channel count."""
+
+from __future__ import annotations
+
+from repro.energy import model as E
+
+
+def run(channels=(64, 128, 256, 512)) -> dict:
+    eff = {n: E.fig6_efficiency(n) for n in channels}
+    best = max(eff, key=eff.get)
+    return {"efficiency_tops_w": eff, "peak_at": best,
+            "claim_peak_at_128": best == 128}
+
+
+def report(res: dict) -> str:
+    lines = ["# Fig 6 — efficiency vs channel count (wiring model)",
+             "| channels | TOp/s/W (model) |", "|---|---|"]
+    for n, e in res["efficiency_tops_w"].items():
+        mark = "  <- peak" if n == res["peak_at"] else ""
+        lines.append(f"| {n} | {e:.0f}{mark} |")
+    return "\n".join(lines)

@@ -1,0 +1,77 @@
+"""Framework roofline table: read dry-run JSONs -> three-term roofline per
+(arch x shape), bottleneck, MODEL_FLOPS/HLO_FLOPS ratio (EXPERIMENTS.md
+§Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.models.config import SHAPES
+from repro.roofline import terms as T
+
+DRYRUN_DIR = "results/dryrun"
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR, mesh: str = "single") -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != mesh or "extrapolated" not in d:
+            continue
+        if d.get("overrides"):          # perf variants live in §Perf only
+            continue
+        cells.append(d)
+    return cells
+
+
+def analyze(cell: dict) -> dict:
+    ex = cell["extrapolated"]
+    chips = cell["chips"]
+    # cost_analysis flops/bytes are per-device under SPMD; wire bytes are
+    # per-device by construction of the parser.
+    rf = T.roofline(ex["flops"], ex["bytes"],
+                    ex["collective_wire_bytes"])
+    shape = SHAPES[cell["shape"]]
+    n_tokens = cell["tokens_global"]
+    p = cell["params"]
+    if shape.kind == "train":
+        mf = T.model_flops_train(p["matmul"], n_tokens,
+                                 p["active_matmul"])
+    else:
+        mf = T.model_flops_infer(p["matmul"], n_tokens,
+                                 p["active_matmul"])
+    mf_per_dev = mf / chips
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "compute_s": rf.compute_s, "memory_s": rf.memory_s,
+        "collective_s": rf.collective_s,
+        "bottleneck": rf.bottleneck,
+        "step_s": rf.step_s,
+        "compute_fraction": rf.compute_fraction,
+        "model_flops_ratio": mf_per_dev / max(ex["flops"], 1.0),
+        "peak_gb": cell["memory"]["peak_gb"],
+        "hlo_flops_per_dev": ex["flops"],
+    }
+
+
+def run(dryrun_dir: str = DRYRUN_DIR) -> dict:
+    rows = [analyze(c) for c in load_cells(dryrun_dir)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return {"rows": rows, "n_cells": len(rows)}
+
+
+def report(res: dict) -> str:
+    lines = ["# Roofline (single-pod 16x16, v5e constants; seconds/step)",
+             "| arch | shape | compute | memory | collective | bottleneck |"
+             " roofline frac | useful-FLOP ratio | peak GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in res["rows"]:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['compute_fraction']:.2f} | "
+            f"{r['model_flops_ratio']:.2f} | {r['peak_gb']:.1f} |")
+    return "\n".join(lines)

@@ -1,0 +1,85 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig10,table2] [--fast]
+
+Writes results/bench/<name>.json + a combined markdown report, and prints
+``name,seconds,headline`` CSV lines.  --fast skips the QAT-training-heavy
+tables unless their caches exist (CI mode).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+from benchmarks import (fig6_channels, fig10_switching, fig11_energy,
+                        roofline_report, table2_tiling, table4_strategies,
+                        table5_sota)
+
+HEAVY = {"table4", "fig11"}
+
+BENCHES = {
+    "table2": table2_tiling,
+    "table4": table4_strategies,
+    "fig6": fig6_channels,
+    "fig10": fig10_switching,
+    "fig11": fig11_energy,
+    "table5": table5_sota,
+    "roofline": roofline_report,
+}
+
+
+def _headline(name: str, res: dict) -> str:
+    if "checks" in res:
+        ok = sum(bool(v) for v in res["checks"].values())
+        return f"{ok}/{len(res['checks'])} checks pass"
+    if name == "roofline":
+        return f"{res['n_cells']} cells"
+    return "ok"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip QAT-heavy benches without a cache")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args(argv)
+
+    names = (args.only.split(",") if args.only else list(BENCHES))
+    os.makedirs(args.out, exist_ok=True)
+    report_md, failures = [], []
+    print("name,seconds,headline")
+    for name in names:
+        mod = BENCHES[name]
+        if args.fast and name in HEAVY:
+            cache = getattr(mod, "CACHE", None)
+            if not (cache and os.path.exists(cache)):
+                print(f"{name},0.0,skipped (--fast; no cache)")
+                continue
+        t0 = time.time()
+        try:
+            res = mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name},{time.time() - t0:.1f},FAILED {e!r}")
+            continue
+        dt = time.time() - t0
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        report_md.append(mod.report(res))
+        print(f"{name},{dt:.1f},{_headline(name, res)}")
+
+    with open(os.path.join(args.out, "REPORT.md"), "w") as f:
+        f.write("\n\n".join(report_md) + "\n")
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

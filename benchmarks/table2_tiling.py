@@ -1,0 +1,38 @@
+"""Paper Table II: depth-first vs layer-first tiled execution energy."""
+
+from __future__ import annotations
+
+from repro.energy import tiling
+
+
+def run() -> dict:
+    rows = tiling.table2()
+    checks = {
+        # ordered claims under test (paper §III-E)
+        "equal_at_32": abs(rows[0]["model_depth_first_uj"]
+                           - rows[0]["model_layer_first_uj"]) < 1e-9,
+        "df_wins_64": rows[1]["model_depth_first_uj"]
+        < rows[1]["model_layer_first_uj"],
+        "df_wins_96": rows[2]["model_depth_first_uj"]
+        < rows[2]["model_layer_first_uj"],
+        "dram_dominates_64": rows[1]["df_detail"]["fm_transfer_uj"]
+        > rows[1]["df_detail"]["compute_uj"],
+    }
+    return {"rows": rows, "checks": checks}
+
+
+def report(res: dict) -> str:
+    lines = ["# Table II — tiled execution energy (model vs paper)",
+             "| frame | model DF µJ | model LF µJ | paper DF µJ | "
+             "paper LF µJ | DF dram Mbit | DF wt switches |",
+             "|---|---|---|---|---|---|---|"]
+    for r in res["rows"]:
+        lines.append(
+            f"| {r['frame']}x{r['frame']} | "
+            f"{r['model_depth_first_uj']:.1f} | "
+            f"{r['model_layer_first_uj']:.1f} | "
+            f"{r['paper_depth_first_uj']} | {r['paper_layer_first_uj']} | "
+            f"{r['df_detail']['dram_mbit']:.2f} | "
+            f"{r['df_detail']['weight_switches']} |")
+    lines.append(f"checks: {res['checks']}")
+    return "\n".join(lines)

@@ -1,0 +1,73 @@
+"""The paper's CIFAR-10 pipeline end-to-end (Tables III/IV, Figs 8/11).
+
+    PYTHONPATH=src python examples/cutie_cifar.py [--width 16] [--steps 200]
+
+1. trains the CUTIE CNN (Table III layout) on synthcifar with INQ staged
+   quantization (Fig. 8 schedule, Magnitude-Inverse strategy),
+2. compiles the trained float graph into the bit-true CUTIE program
+   (pure-trit weights + folded two-threshold activations),
+3. checks QAT-graph vs bit-true-engine prediction parity,
+4. prices the inference with the calibrated energy model (TOp/s/W, µJ).
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.data import cifar
+from repro.energy import model as E
+from repro.models import cutie_cnn
+from repro.train import cutie_qat as Q
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--strategy", default="magnitude-inverse")
+    ap.add_argument("--mode", default="ternary",
+                    choices=["ternary", "binary"])
+    args = ap.parse_args(argv)
+
+    rc = Q.QATRunConfig(width=args.width, steps=args.steps,
+                        mode=args.mode, strategy=args.strategy)
+    print(f"training CUTIE CNN (width={rc.width}, {rc.steps} steps, "
+          f"{rc.mode}/{rc.strategy}) ...")
+    res = Q.run(rc)
+    print(f"  accuracy={res['accuracy']:.3f} "
+          f"weight sparsity={res['weight_sparsity']:.3f}")
+
+    print("compiling to bit-true CUTIE program ...")
+    prog = Q.to_program(res)
+    prog.validate()
+
+    # parity: QAT graph argmax == engine argmax on a test batch
+    b = cifar.encoded_batch(rc.data, "test", 0, 16,
+                            m=res["cfg"].thermometer_m, ternary=True)
+    x_trits = jnp.asarray(b["x"]).astype(jnp.int8)
+    logits, _ = cutie_cnn.forward(
+        res["params"], jnp.asarray(b["x"]), res["cfg"], train=False,
+        inq_state={"layers": res["inq_state"]["layers"]})
+    qat_pred = np.asarray(jnp.argmax(logits, -1))
+
+    feats = engine.run_program(prog, x_trits)
+    # final FC runs on the engine's trit features (fp head, like the paper)
+    fc = np.asarray(res["params"]["fc"])
+    eng_pred = np.argmax(
+        np.asarray(feats).reshape(16, -1).astype(np.float32) @ fc, -1)
+    agree = float(np.mean(qat_pred == eng_pred))
+    print(f"  QAT-graph vs bit-true engine argmax agreement: {agree:.2f}")
+
+    print("pricing with the calibrated energy model ...")
+    for tech in ("GF22_SCM", "TSMC7_SCM"):
+        en = E.program_energy(prog, x_trits[:1], E.EnergyParams(tech))
+        print(f"  {tech}: avg {en['avg_tops_w']:.0f} TOp/s/W, "
+              f"peak {en['peak_tops_w']:.0f}, "
+              f"{en['energy_uj']:.3f} uJ/inference")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Quickstart: the CUTIE primitives in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's pipeline end-to-end on toy tensors:
+  1. ternary thermometer input encoding (§III-D),
+  2. STE ternarization + TWN scales (§II-A),
+  3. threshold folding: conv+BN+Hardtanh+ternarize -> 2 compares (§III-C),
+  4. the 5-trits-per-byte codec (§III-A),
+  5. the packed-trit ternary matmul kernel (ref + Pallas-interpret),
+  6. the switching-activity/energy story (§V-C..E).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import folding, ternary, thermometer
+from repro.energy import model as energy_model, switching
+from repro.kernels import ops, ref
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # 1. thermometer encoding ------------------------------------------------
+    x = jnp.asarray([110, 128, 200])
+    enc = thermometer.ternary_thermometer(x, m=128)
+    print(f"ternary thermometer of {list(map(int, x))}: "
+          f"zeros={float(jnp.mean(enc == 0)):.2f} "
+          f"(paper: first layer ~66% zeros)")
+
+    # 2. weight ternarization ------------------------------------------------
+    w = jax.random.normal(key, (64, 32))
+    wq = ternary.ternarize(w, ternary.twn_delta(w))
+    print(f"TWN ternarize: sparsity={float(ternary.sparsity(wq)):.2f} "
+          f"(delta=0.7*mean|w|)")
+
+    # 3. threshold folding ---------------------------------------------------
+    z = jax.random.randint(key, (8, 32), -200, 200)
+    bn = dict(alpha=jnp.full((32,), 0.05), bias=jnp.zeros((32,)),
+              gamma=jax.random.normal(key, (32,)), beta=jnp.zeros((32,)),
+              mean=jnp.zeros((32,)), var=jnp.ones((32,)))
+    th = folding.fold_thresholds(**bn)
+    out_folded = folding.apply_thresholds(z, th)
+    out_ref = folding.reference_float_activation(z, **bn)
+    assert jnp.array_equal(out_folded, out_ref)
+    print("threshold folding == float(BN+hardtanh+ternarize): exact")
+
+    # 4. trit codec ----------------------------------------------------------
+    trits = ternary.ternarize(jax.random.normal(key, (4, 40)), 0.6)
+    packed = ref.pack_trits(trits.astype(jnp.int8))
+    assert jnp.array_equal(ref.unpack_trits(packed), trits.astype(jnp.int8))
+    print(f"trit codec: {trits.size} trits -> {packed.size} bytes "
+          f"({8 * packed.size / trits.size:.1f} bits/trit)")
+
+    # 5. packed ternary matmul (the OCU-array kernel) ------------------------
+    xm = jax.random.randint(key, (128, 640), -1, 2).astype(jnp.int8)
+    wm = ternary.ternarize(jax.random.normal(key, (640, 128)), 0.5)
+    wp = ref.pack_trits(wm.astype(jnp.int8).T).T
+    y_ref = ops.ternary_matmul(xm, wp, backend="ref")
+    y_pl = ops.ternary_matmul(xm, wp, backend="pallas_interpret")
+    assert jnp.array_equal(y_ref, y_pl)
+    print(f"ternary matmul: ref == pallas(interpret), out int32 "
+          f"max|acc|={int(jnp.max(jnp.abs(y_ref)))}")
+
+    # 6. energy story ---------------------------------------------------------
+    fm = ternary.ternarize(jax.random.normal(key, (16, 16, 64)), 0.6)
+    wconv = ternary.ternarize(jax.random.normal(key, (3, 3, 64, 64)), 0.6)
+    for machine in ("unrolled", "iterative"):
+        st = switching.layer_switching(
+            np.asarray(fm), np.asarray(wconv), machine=machine)
+        print(f"  {machine:9s}: adder-tree toggle={st.adder_toggle:.3f}")
+    p = energy_model.EnergyParams("GF22_SCM")
+    print(f"model: 60.7%-sparse ternary @22nm = "
+          f"{p.efficiency_tops_w(0.393, energy_model.TERNARY_ACT_TOGGLE):.0f}"
+          f" TOp/s/W (paper: 392)")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

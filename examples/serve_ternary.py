@@ -1,0 +1,76 @@
+"""End-to-end serving driver (the paper is an inference engine, so the
+e2e example is serving): continuous batching over a ternary-weight model.
+
+    PYTHONPATH=src python examples/serve_ternary.py [--requests 12]
+
+Serves the same (reduced) llama backbone in two weight modes:
+  * bf16 baseline,
+  * ternary_packed — weights stored as packed trits (5/byte, 10x smaller
+    than bf16) and decoded next to the matmul, the paper's deployment path.
+Prints throughput and the weight-bytes comparison.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import transformer as TF
+from repro.models.config import reduce_for_smoke
+from repro.serving import Server, ServerConfig
+
+
+def _weight_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    base = reduce_for_smoke(configs.get(args.arch))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab, size=10)
+               for _ in range(args.requests)]
+
+    stats = {}
+    for quant in ("none", "ternary_packed"):
+        cfg = base.replace(quant=quant)
+        params = TF.init_params(cfg, jax.random.PRNGKey(0))
+        server = Server(params, cfg, ServerConfig(
+            n_slots=args.slots, max_new_tokens=args.max_new))
+        for p in prompts:
+            server.submit(p)
+        t0 = time.perf_counter()
+        outs = server.run()
+        dt = time.perf_counter() - t0
+        ntok = sum(len(v) for v in outs.values())
+        proj = {k: v for k, v in _flat(params) if "embed" not in k
+                and "head" not in k}
+        stats[quant] = {"tok_s": ntok / dt, "dt": dt,
+                        "proj_bytes": sum(
+                            x.size * x.dtype.itemsize
+                            for x in proj.values())}
+        print(f"[{quant}] {len(outs)} requests, {ntok} tokens, "
+              f"{ntok / dt:.1f} tok/s "
+              f"(projection weights: {stats[quant]['proj_bytes']/1e6:.2f} MB)")
+
+    ratio = stats["none"]["proj_bytes"] / stats["ternary_packed"]["proj_bytes"]
+    print(f"packed-trit projection weights are {ratio:.1f}x smaller "
+          f"(16 bf16-bits -> 1.6 bits/weight + fp32 scales)")
+
+
+def _flat(params):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        yield "/".join(str(getattr(k, "key", k)) for k in path), leaf
+
+
+if __name__ == "__main__":
+    main()

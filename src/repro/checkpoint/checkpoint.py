@@ -1,0 +1,209 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-independent, trit-packed.
+
+Format: one directory per step —
+
+    <root>/step_000123/
+        manifest.json     tree paths, shapes, dtypes, encodings, step meta
+        <leaf-id>.npy     one file per leaf (gathered, mesh-independent)
+
+Properties required at 1000+ node scale:
+
+* **atomic** — written to ``step_X.tmp`` and renamed; a crash mid-save never
+  corrupts the latest valid checkpoint; `latest_step` ignores tmp dirs.
+* **mesh-independent / elastic** — leaves are stored as full (gathered)
+  arrays keyed by tree path; restore takes a *template* pytree and an
+  optional (mesh, pspecs) and re-shards onto whatever topology the job
+  restarted with (different DP size, different chip count).
+* **async** — `CheckpointManager.save_async` snapshots to host memory
+  synchronously (cheap) and writes on a worker thread, overlapping with the
+  next training steps; `wait()` joins before the process exits.
+* **trit-packed** — int8 leaves whose values are all in {-1,0,+1} are stored
+  packed 5-per-byte (the paper's 1.6 b/trit codec applied to storage I/O);
+  ~5x smaller ternary checkpoints.
+* **self-pruning** — keeps the last ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, object]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def _is_trit(a: np.ndarray) -> bool:
+    if a.dtype != np.int8 or a.size == 0 or a.size % 5 != 0:
+        return False
+    mn, mx = a.min(), a.max()
+    return mn >= -1 and mx <= 1
+
+
+_POW3 = np.array([1, 3, 9, 27, 81], np.uint16)
+
+# dtypes np.save round-trips natively
+_NATIVE = {"bool", "int8", "int16", "int32", "int64", "uint8", "uint16",
+           "uint32", "uint64", "float16", "float32", "float64",
+           "complex64", "complex128"}
+
+
+def _pack(a: np.ndarray) -> np.ndarray:
+    d = (a.reshape(-1, 5).astype(np.int16) + 1).astype(np.uint16)
+    return (d @ _POW3).astype(np.uint8)
+
+
+def _unpack(b: np.ndarray, shape) -> np.ndarray:
+    v = b.astype(np.int32)
+    digits = []
+    for _ in range(5):
+        digits.append(v % 3)
+        v //= 3
+    d = np.stack(digits, -1).astype(np.int8) - 1
+    return d.reshape(shape)
+
+
+def save(root: str, step: int, tree, extra: dict | None = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the final directory path."""
+    tmp = os.path.join(root, f"step_{step:09d}.tmp")
+    final = os.path.join(root, f"step_{step:09d}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(_flatten(tree)):
+        a = np.asarray(jax.device_get(leaf))
+        entry = {"path": path, "file": f"{i:05d}.npy",
+                 "shape": list(a.shape), "dtype": str(a.dtype),
+                 "encoding": "raw"}
+        if _is_trit(a):
+            entry["encoding"] = "trit5"
+            a = _pack(a)
+        elif a.dtype.kind == "V" or str(a.dtype) not in _NATIVE:
+            # ml_dtypes (bfloat16/fp8) don't round-trip through np.save;
+            # store the raw bytes and re-view on restore.
+            entry["encoding"] = "bytes"
+            a = np.ascontiguousarray(a).view(np.uint8)
+        np.save(os.path.join(tmp, entry["file"]), a)
+        manifest["leaves"].append(entry)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(root, keep)
+    return final
+
+
+def steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(root, d, "manifest.json")):
+            out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    s = steps(root)
+    return s[-1] if s else None
+
+
+def _prune(root: str, keep: int):
+    for s in steps(root)[:-keep]:
+        shutil.rmtree(os.path.join(root, f"step_{s:09d}"), ignore_errors=True)
+    for d in os.listdir(root):          # stale tmp dirs from crashes
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+def restore(root: str, template, step: int | None = None, mesh=None,
+            pspecs=None) -> tuple:
+    """Restore into the structure of ``template``.
+
+    Returns (tree, manifest).  With (mesh, pspecs) the leaves come back as
+    sharded jax.Arrays on that mesh — the topology may differ from the one
+    that saved (elastic restart).  Without a mesh, numpy leaves.
+    """
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    tpl_flat = _flatten(template)
+    treedef = jax.tree_util.tree_structure(template)
+    spec_leaves = (jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec)) if pspecs is not None
+        else [None] * len(tpl_flat))
+
+    leaves = []
+    for (path, tpl), spec in zip(tpl_flat, spec_leaves):
+        e = by_path.get(path)
+        if e is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        a = np.load(os.path.join(d, e["file"]))
+        if e["encoding"] == "trit5":
+            a = _unpack(a, e["shape"])
+        elif e["encoding"] == "bytes":
+            a = a.view(jax.numpy.dtype(e["dtype"])).reshape(e["shape"])
+        if hasattr(tpl, "dtype") and str(a.dtype) != str(tpl.dtype):
+            a = a.astype(jax.numpy.dtype(tpl.dtype))
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            sh = NamedSharding(mesh, spec if spec is not None else P())
+            a = jax.make_array_from_process_local_data(sh, a)
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class CheckpointManager:
+    """Async save + restore with a bounded queue of one in-flight write."""
+
+    def __init__(self, root: str, keep: int = 3, every: int = 50):
+        self.root = root
+        self.keep = keep
+        self.every = every
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.root, step, host_tree, extra, self.keep),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template, mesh=None, pspecs=None):
+        return restore(self.root, template, mesh=mesh, pspecs=pspecs)

@@ -1,0 +1,14 @@
+"""CUTIE core: the paper's contribution as composable JAX modules.
+
+Modules:
+  ternary     — {-1,0,+1} quantizers + STE for QAT
+  inq         — incremental quantization with ordered freezing (3 strategies)
+  codec       — 5-trits-per-byte storage/wire codec
+  thermometer — binary & ternary thermometer input encodings
+  folding     — conv+BN+Hardtanh+ternarize -> two-threshold compile
+  engine      — CUTIE layer-instruction compiler + bit-true executor
+"""
+
+from repro.core import codec, engine, folding, inq, ternary, thermometer
+
+__all__ = ["codec", "engine", "folding", "inq", "ternary", "thermometer"]

@@ -1,0 +1,242 @@
+"""CUTIE core: layer-instruction compiler + bit-true functional engine.
+
+This is the functional model of the accelerator (paper §III): networks are
+*compiled* into a sequence of layer instructions — ternary conv weights
+(pure trits), folded two-threshold activation, optional merged pooling,
+stride/padding meta — and then *executed* layer-wise, exactly like the
+hardware's layer FIFO drives the OCU array.
+
+Everything the executor computes is integer-exact:
+  * activations are trits in {-1,0,+1} (int8),
+  * the conv accumulator is int32 (the OCU popcount difference, bounded by
+    K*K*N_I = 1152 for the paper's design point),
+  * pooling happens on the pre-threshold integers (avg = sum + scaled
+    thresholds, max = max of sign(g)*z),
+  * the two-threshold compare produces the next layer's trits.
+
+The executor doubles as the data source for the energy model: it returns
+per-layer tensors from which switching activity / sparsity statistics are
+derived (`repro.energy`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import folding
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Hardware instance parameters (paper Table I + §III-E design points)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CutieInstance:
+    """Compile-time parameters of a CUTIE instantiation."""
+    n_i: int = 128          # max input channels
+    n_o: int = 128          # max output channels
+    k: int = 3              # max (odd, square) kernel size
+    i_w: int = 32           # max feature-map width
+    i_h: int = 32           # max feature-map height
+    n_layers: int = 8       # layer-FIFO depth (queueable layers)
+    pipeline: int = 8       # OCU pipeline stages P
+    freq_hz: float = 66e6   # paper's conservative clock
+    technology: str = "GF22_SCM"   # GF22_SCM | GF22_SRAM | TSMC7_SCM
+
+    @property
+    def macs_per_cycle(self) -> int:
+        # One output pixel for all N_O channels per cycle, K*K*N_I MACs each.
+        return self.k * self.k * self.n_i * self.n_o
+
+    @property
+    def peak_tops(self) -> float:
+        """Peak throughput in TOp/s (1 MAC = 2 Op, paper's Gamma formula)."""
+        return 2 * self.macs_per_cycle * self.freq_hz / 1e12
+
+
+GF22_SCM = CutieInstance(technology="GF22_SCM")
+GF22_SRAM = CutieInstance(i_w=160, i_h=120, technology="GF22_SRAM")
+TSMC7_SCM = CutieInstance(technology="TSMC7_SCM")
+
+
+# ---------------------------------------------------------------------------
+# Layer instructions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerInstr:
+    """One compiled CUTIE layer (weights + thresholds + meta-information)."""
+    weights: Array                      # (K, K, Cin, Cout) int8 trits
+    thresholds: folding.ChannelThresholds
+    stride: tuple[int, int] = (1, 1)
+    padding: bool = True                # full zero padding (paper supports 0/1)
+    pool: tuple[str, int] | None = None  # ("max"|"avg", window) or None
+
+    @property
+    def kernel_size(self) -> int:
+        return self.weights.shape[0]
+
+
+@dataclasses.dataclass
+class CutieProgram:
+    layers: list
+    instance: CutieInstance
+
+    def validate(self) -> None:
+        inst = self.instance
+        if len(self.layers) > inst.n_layers:
+            raise ValueError(
+                f"{len(self.layers)} layers exceed layer FIFO depth "
+                f"{inst.n_layers}")
+        for i, l in enumerate(self.layers):
+            k, _, cin, cout = l.weights.shape
+            if k > inst.k or k % 2 == 0:
+                raise ValueError(f"layer {i}: kernel {k} unsupported")
+            if cin > inst.n_i or cout > inst.n_o:
+                raise ValueError(
+                    f"layer {i}: channels ({cin},{cout}) exceed "
+                    f"({inst.n_i},{inst.n_o})")
+            if not (1 <= l.stride[0] <= 3 and 1 <= l.stride[1] <= 3):
+                raise ValueError(f"layer {i}: stride {l.stride} unsupported")
+
+
+def compile_layer(w_float: Array, bn: dict, *, stride=(1, 1), padding=True,
+                  pool=None, delta_ratio: float = 0.7) -> LayerInstr:
+    """Fold a float (already ternary-valued or latent) conv+BN layer.
+
+    ``w_float`` is (K, K, Cin, Cout).  If it is not yet pure trits, TWN
+    ternarization with per-channel scale is applied; the scale folds into
+    the thresholds (the hardware only ever sees pure trits).
+    """
+    from repro.core import ternary as T
+
+    axes = (0, 1, 2)
+    uniq = np.unique(np.asarray(jax.device_get(w_float)))
+    if np.all(np.isin(uniq, (-1.0, 0.0, 1.0))):
+        trits = w_float.astype(jnp.int8)
+        alpha = jnp.ones((w_float.shape[-1],), jnp.float32)
+    else:
+        delta = T.twn_delta(w_float, axis=axes, ratio=delta_ratio)
+        trits_f = T.ternarize(w_float, delta)
+        alpha = T.twn_scale(w_float, trits_f, axis=axes).reshape(-1)
+        trits = trits_f.astype(jnp.int8)
+
+    th = folding.fold_thresholds(
+        alpha=alpha,
+        bias=jnp.asarray(bn.get("bias", 0.0), jnp.float32),
+        gamma=jnp.asarray(bn.get("gamma", 1.0), jnp.float32),
+        beta=jnp.asarray(bn.get("beta", 0.0), jnp.float32),
+        mean=jnp.asarray(bn.get("mean", 0.0), jnp.float32),
+        var=jnp.asarray(bn.get("var", 1.0), jnp.float32),
+        eps=float(bn.get("eps", 1e-5)),
+    )
+    if pool is not None and pool[0] == "avg":
+        th = folding.scale_for_avgpool(th, pool[1] * pool[1])
+    return LayerInstr(weights=trits, thresholds=th, stride=tuple(stride),
+                      padding=padding, pool=pool)
+
+
+# ---------------------------------------------------------------------------
+# Bit-true execution
+# ---------------------------------------------------------------------------
+
+
+def conv2d_int(x: Array, w: Array, stride=(1, 1), padding=True) -> Array:
+    """Integer conv (NHWC x HWIO -> NHWC, int32 accumulation).
+
+    This is the reference path; `repro.kernels.ternary_conv2d` provides the
+    TPU Pallas version with identical semantics.
+    """
+    k = w.shape[0]
+    pad = ((k // 2, k // 2),) * 2 if padding else ((0, 0), (0, 0))
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=stride, padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+
+
+def _pool_pre_threshold(z: Array, th: folding.ChannelThresholds,
+                        pool: tuple[str, int]) -> Array:
+    """Merged pooling on pre-threshold integers (paper Fig. 5 semantics)."""
+    kind, win = pool
+    n, h, w, c = z.shape
+    zh = z[:, : h - h % win, : w - w % win, :]
+    zh = zh.reshape(n, h // win, win, w // win, win, c)
+    if kind == "avg":
+        return jnp.sum(zh, axis=(2, 4))            # thresholds pre-scaled
+    # max pooling must follow the compare direction: pool sign(g)*z.
+    sgn = jnp.where(th.flip, -1, 1).astype(z.dtype)
+    zs = zh * sgn
+    return jnp.max(zs, axis=(2, 4)) * sgn
+
+
+def run_layer(x: Array, instr: LayerInstr) -> tuple[Array, Array]:
+    """Execute one compiled layer; returns (trit output, int32 pre-act z)."""
+    z = conv2d_int(x, instr.weights, instr.stride, instr.padding)
+    if instr.pool is not None:
+        z = _pool_pre_threshold(z, instr.thresholds, instr.pool)
+    out = folding.apply_thresholds(z, instr.thresholds)
+    return out, z
+
+
+def run_program(program: CutieProgram, x: Array,
+                collect_stats: bool = False):
+    """Execute a full network on input trits x (N, H, W, C) int8.
+
+    Returns the final trit tensor; with ``collect_stats`` also a per-layer
+    list of dicts feeding the energy model (activation/weight sparsity and
+    the tensors needed for toggle-rate analysis).
+    """
+    program.validate()
+    stats = []
+    for instr in program.layers:
+        y, z = run_layer(x, instr)
+        if collect_stats:
+            stats.append({
+                "in_sparsity": float(jnp.mean(x == 0)),
+                "weight_sparsity": float(jnp.mean(instr.weights == 0)),
+                "out_sparsity": float(jnp.mean(y == 0)),
+                "in_shape": tuple(x.shape),
+                "out_shape": tuple(y.shape),
+                "kernel": tuple(instr.weights.shape),
+                "ops": layer_ops(instr, x.shape),
+            })
+        x = y
+    return (x, stats) if collect_stats else x
+
+
+def layer_ops(instr: LayerInstr, in_shape) -> int:
+    """Paper's op count Gamma = 2 * Iw * Ih * K * K * N_I * N_O.
+
+    Iw/Ih are the *output* spatial dims (pre-pooling), §V-B.
+    """
+    k, _, cin, cout = instr.weights.shape
+    _, h, w, _ = in_shape
+    if instr.padding:
+        oh, ow = h // instr.stride[0], w // instr.stride[1]
+    else:
+        oh = (h - k) // instr.stride[0] + 1
+        ow = (w - k) // instr.stride[1] + 1
+    return 2 * ow * oh * k * k * cin * cout
+
+
+def dense_as_conv(w_dense: Array, max_in: int = 1152,
+                  max_out: int = 128) -> Array:
+    """Map a ternary dense layer onto a 3x3 OCU weight buffer (paper §III-E):
+    inputs up to 3*3*128 = 1152 map into the (K,K,Cin) axes."""
+    d_in, d_out = w_dense.shape
+    if d_in > max_in or d_out > max_out:
+        raise ValueError(f"dense {w_dense.shape} exceeds OCU buffer")
+    pad_in = max_in - d_in
+    w = jnp.pad(w_dense, ((0, pad_in), (0, 0)))
+    return w.reshape(3, 3, 128, d_out)

@@ -1,0 +1,123 @@
+"""Threshold folding: conv + bias + BN + Hardtanh + ternarize -> 2 compares.
+
+Paper §III-C: "the networks' convolutional layers' biases, batch
+normalization layers, and activation functions are combined to produce two
+thresholds that are used to ternarize intermediate results".
+
+Derivation.  With pure-trit weights the conv produces an integer z per
+output channel.  The float pipeline computes
+
+    y = gamma * (alpha * z + b - mu) / sqrt(var + eps) + beta
+    out = ternarize(hardtanh(y), 0.5)
+
+(hardtanh is transparent here because the +-0.5 ternarization thresholds lie
+inside [-1, 1]).  Writing g = gamma * alpha / sqrt(var+eps) and
+c = gamma * (b - mu) / sqrt(var+eps) + beta, we get y = g*z + c and
+
+    out = +1  iff  g*z + c >  0.5
+    out = -1  iff  g*z + c < -0.5
+
+For g > 0 this is the two-threshold compare the OCU implements:
+    T_hi = (0.5 - c) / g,   T_lo = (-0.5 - c) / g,
+    out  = (z > T_hi) - (z < T_lo).
+For g < 0 the compare direction flips (stored as a per-channel flag; the
+hardware can equally negate the weights of that output channel).  g == 0
+degenerates to a constant channel ternarize(c).
+
+Average pooling is merged by summing z over the pool window and scaling both
+thresholds by the window size (paper §III-C); max pooling pools the
+intermediate values pre-threshold — equivalent to pooling the ternary
+outputs because the compare chain is monotone in g*z (we pool sign(g)*z).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ChannelThresholds:
+    """Per-output-channel folded activation: out = cmp(z, t_lo, t_hi, flip)."""
+    t_lo: Array        # (C,) float32
+    t_hi: Array        # (C,) float32
+    flip: Array        # (C,) bool  — True where g < 0
+    const: Array       # (C,) int8  — used where g == 0 (degenerate channel)
+    is_const: Array    # (C,) bool
+
+    def tree_flatten(self):
+        return (self.t_lo, self.t_hi, self.flip, self.const, self.is_const), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    ChannelThresholds,
+    lambda t: t.tree_flatten(),
+    ChannelThresholds.tree_unflatten,
+)
+
+
+def fold_thresholds(alpha: Array, bias: Array, gamma: Array, beta: Array,
+                    mean: Array, var: Array, eps: float = 1e-5,
+                    act_threshold: float = 0.5) -> ChannelThresholds:
+    """Fold (scale, bias, BN, hardtanh+ternarize) into two thresholds.
+
+    All arguments are per-output-channel vectors (broadcastable to (C,)).
+    ``alpha`` is the ternary weight scale (weights stored as pure trits).
+    """
+    s = jnp.sqrt(var + eps)
+    g = gamma * alpha / s
+    c = gamma * (bias - mean) / s + beta
+    safe_g = jnp.where(g == 0, 1.0, g)
+    t_hi = (act_threshold - c) / safe_g
+    t_lo = (-act_threshold - c) / safe_g
+    flip = g < 0
+    # Where flipped, the numeric roles of hi/lo swap so that the stored pair
+    # always satisfies t_lo <= t_hi and the compare uses the flip flag.
+    t_lo_f = jnp.where(flip, t_hi, t_lo)
+    t_hi_f = jnp.where(flip, t_lo, t_hi)
+    const = ((c > act_threshold).astype(jnp.int8)
+             - (c < -act_threshold).astype(jnp.int8))
+    return ChannelThresholds(
+        t_lo=t_lo_f.astype(jnp.float32),
+        t_hi=t_hi_f.astype(jnp.float32),
+        flip=flip,
+        const=const,
+        is_const=(g == 0),
+    )
+
+
+def apply_thresholds(z: Array, th: ChannelThresholds) -> Array:
+    """Ternarize integer pre-activations z (..., C) via the folded compares."""
+    zf = z.astype(jnp.float32)
+    pos = jnp.where(th.flip, zf < th.t_hi, zf > th.t_hi)
+    neg = jnp.where(th.flip, zf > th.t_lo, zf < th.t_lo)
+    out = pos.astype(jnp.int8) - neg.astype(jnp.int8)
+    return jnp.where(th.is_const, th.const, out)
+
+
+def scale_for_avgpool(th: ChannelThresholds, window: int) -> ChannelThresholds:
+    """Merged average pooling: z is summed over `window` positions, so the
+    thresholds scale by the window size (paper: 'thresholds ... are scaled
+    up accordingly')."""
+    return ChannelThresholds(
+        t_lo=th.t_lo * window, t_hi=th.t_hi * window,
+        flip=th.flip, const=th.const, is_const=th.is_const)
+
+
+def reference_float_activation(z: Array, alpha, bias, gamma, beta, mean, var,
+                               eps: float = 1e-5,
+                               act_threshold: float = 0.5) -> Array:
+    """The unfolded float pipeline (oracle for the folding property test)."""
+    y = gamma * (alpha * z + bias - mean) / jnp.sqrt(var + eps) + beta
+    y = jnp.clip(y, -1.0, 1.0)
+    return ((y > act_threshold).astype(jnp.int8)
+            - (y < -act_threshold).astype(jnp.int8))

@@ -1,0 +1,205 @@
+"""Incremental Network Quantization with ordered freezing (paper §V-A/§V-D).
+
+The paper trains its ternary/binary networks with an INQ-style [32] schedule:
+train in full precision, then repeatedly *freeze* a growing fraction of each
+weight tensor to its quantized value while the remaining weights keep
+training.  The experimental variable (and the paper's 3rd contribution) is
+the **order** in which weights are frozen, the *quantization strategy*:
+
+* ``magnitude``          — largest |w| first (classic INQ order),
+* ``magnitude-inverse``  — smallest |w| first.  Small weights ternarize to 0,
+                           so this maximizes sparsity: 60.7% vs 7.4% at
+                           iso-accuracy on CIFAR-10 (Table IV),
+* ``zigzag``             — alternate smallest / largest remaining.
+
+The default cumulative schedule follows the paper's Fig. 8: step sizes start
+at 20%, decay to 10% and finish at 5%.
+
+State is a pytree mirroring the selected weight leaves with:
+  ``mask`` — 1.0 where frozen,
+  ``q``    — the frozen quantized value (scale already applied).
+Effective weights are ``where(mask, q, w)``; gradients of frozen entries are
+masked to zero, so frozen values never drift (strict INQ semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+Array = jax.Array
+
+# Fig. 8: 20/20/20 then 10/10 then 5/5/5/5/5 percent steps (cumulative).
+PAPER_SCHEDULE = (0.2, 0.4, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0)
+
+STRATEGIES = ("magnitude", "magnitude-inverse", "zigzag")
+
+
+@dataclasses.dataclass(frozen=True)
+class INQConfig:
+    schedule: tuple = PAPER_SCHEDULE       # cumulative frozen fractions
+    strategy: str = "magnitude-inverse"
+    mode: str = "ternary"                  # "ternary" | "binary"
+    ratio: float = 0.7                     # TWN delta ratio
+    with_scale: bool = True                # fold-able scale alpha
+
+    def __post_init__(self):
+        assert self.strategy in STRATEGIES, self.strategy
+        assert self.mode in ("ternary", "binary"), self.mode
+
+
+def _freeze_priority(w: Array, strategy: str) -> Array:
+    """Return a priority value per element: LOWER freezes EARLIER.
+
+    Computed over the flat tensor from |w| ranks so it is shape-agnostic.
+    """
+    a = jnp.abs(w.reshape(-1))
+    n = a.shape[0]
+    asc_rank = jnp.argsort(jnp.argsort(a))            # 0 = smallest |w|
+    if strategy == "magnitude":
+        prio = (n - 1) - asc_rank                     # largest first
+    elif strategy == "magnitude-inverse":
+        prio = asc_rank                               # smallest first
+    else:  # zigzag: smallest, largest, 2nd smallest, 2nd largest, ...
+        desc_rank = (n - 1) - asc_rank
+        prio = jnp.minimum(2 * asc_rank, 2 * desc_rank + 1)
+    return prio.reshape(w.shape).astype(jnp.int32)
+
+
+def _quantize(w: Array, cfg: INQConfig, group=None) -> Array:
+    """Quantize w; thresholds/scales from the ``group`` mask's population.
+
+    INQ quantizes each phase's group by the group's own statistics (the
+    paper's strategies differ exactly in which group freezes first): with
+    the Magnitude order each group consists of the largest remaining
+    weights, whose subset threshold 0.7*mean|w_group| lies below all of
+    them -> ~0% zeros; the Magnitude-Inverse groups are the smallest
+    weights -> ~half of each group ternarizes to 0 (paper Table IV:
+    7.4% vs 60.7% sparsity).
+    """
+    if group is None:
+        group = jnp.ones_like(w)
+    gsum = jnp.maximum(jnp.sum(group), 1.0)
+    mean_abs = jnp.sum(jnp.abs(w) * group) / gsum
+    if cfg.mode == "binary":
+        q = ternary.binarize(w)
+        if cfg.with_scale:
+            q = q * mean_abs
+        return q
+    delta = cfg.ratio * mean_abs
+    q = ternary.ternarize(w, delta)
+    if cfg.with_scale:
+        nz = (q != 0) * group
+        scale = jnp.sum(jnp.abs(w) * nz) / jnp.maximum(jnp.sum(nz), 1.0)
+        q = q * scale
+    return q.astype(w.dtype)
+
+
+def init_state(params: Any,
+               select: Callable[[tuple, Array], bool] | None = None) -> Any:
+    """Build INQ state for every selected weight leaf (default: ndim >= 2)."""
+
+    def leaf_state(path, w):
+        if select is not None and not select(path, w):
+            return None
+        if w.ndim < 2:
+            return None
+        return {"mask": jnp.zeros_like(w), "q": jnp.zeros_like(w)}
+
+    return jax.tree_util.tree_map_with_path(leaf_state, params)
+
+
+def freeze(state: Any, params: Any, cum_fraction: float,
+           cfg: INQConfig) -> Any:
+    """Advance freezing so that ``cum_fraction`` of each tensor is frozen.
+
+    Already-frozen entries keep their stored ``q`` (strict INQ); only newly
+    frozen entries are quantized, using thresholds/scales computed from the
+    *current* latent tensor (so later phases see the re-trained weights).
+    """
+
+    def leaf(st, w):
+        if st is None:
+            return None
+        n = w.size
+        k = jnp.asarray(round(cum_fraction * n), jnp.int32)
+        prio = _freeze_priority(w, cfg.strategy)
+        # Frozen entries get priority -1 so they always stay inside the cut.
+        prio = jnp.where(st["mask"] > 0, -1, prio)
+        new_mask = (prio < k).astype(w.dtype)
+        newly = (new_mask > 0) & (st["mask"] == 0)
+        q_now = _quantize(w, cfg, group=newly.astype(w.dtype))
+        q = jnp.where(newly, q_now, st["q"])
+        return {"mask": new_mask, "q": q}
+
+    return _tree_map_state(leaf, state, params)
+
+
+def apply(state: Any, params: Any) -> Any:
+    """Effective parameters: frozen entries replaced by their q values."""
+
+    def leaf(st, w):
+        if st is None:
+            return w
+        return jnp.where(st["mask"] > 0, st["q"], w)
+
+    return _tree_map_state(leaf, state, params)
+
+
+def mask_grads(state: Any, grads: Any) -> Any:
+    """Zero the gradients of frozen weights."""
+
+    def leaf(st, g):
+        if st is None:
+            return g
+        return g * (1.0 - st["mask"])
+
+    return _tree_map_state(leaf, state, grads)
+
+
+def frozen_fraction(state: Any) -> float:
+    leaves = [st["mask"] for st in jax.tree.leaves(
+        state, is_leaf=lambda x: isinstance(x, dict) and "mask" in x)
+        if st is not None]
+    if not leaves:
+        return 0.0
+    tot = sum(m.size for m in leaves)
+    return float(sum(jnp.sum(m) for m in leaves) / tot)
+
+
+def weight_sparsity(state: Any, params: Any) -> float:
+    """Zeros fraction of the *effective* (frozen-applied) weights."""
+    eff = apply(state, params)
+    leaves = [w for st, w in zip(
+        jax.tree.leaves(state, is_leaf=_is_st),
+        jax.tree.leaves(eff)) if st is not None]
+    if not leaves:
+        return 0.0
+    tot = sum(w.size for w in leaves)
+    return float(sum(jnp.sum(w == 0) for w in leaves) / tot)
+
+
+def phase_for_step(step: int, total_steps: int, cfg: INQConfig) -> float:
+    """Map a train step to the cumulative freeze fraction (even spacing)."""
+    n = len(cfg.schedule)
+    # Phases fire at (i+1)/(n+1) of training; the tail trains the residue.
+    idx = -1
+    for i in range(n):
+        if step >= (i + 1) * total_steps // (n + 1):
+            idx = i
+    return 0.0 if idx < 0 else cfg.schedule[idx]
+
+
+# -- helpers ----------------------------------------------------------------
+
+def _is_st(x):
+    return x is None or (isinstance(x, dict) and "mask" in x)
+
+
+def _tree_map_state(fn, state, other):
+    return jax.tree.map(fn, state, other, is_leaf=lambda x: _is_st(x))

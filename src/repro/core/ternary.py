@@ -1,0 +1,146 @@
+"""Ternary quantization primitives (the paper's §II-A / §V-A substrate).
+
+CUTIE computes with weights and activations drawn from {-1, 0, +1}.  This
+module provides:
+
+* threshold ternarization (TWN-style) with straight-through-estimator (STE)
+  gradients so the quantizers are usable inside `jax.grad`,
+* per-tensor / per-channel scale estimation (the scale is *not* computed in
+  hardware — it folds into the batch-norm thresholds, see `folding.py`),
+* the Hardtanh activation used by the paper (its range [-1, 1] covers all
+  three ternary values, unlike ReLU — paper §V-A),
+* activation ternarization with the fixed ±0.5 thresholds the paper's
+  compiled networks use.
+
+All functions are pure jnp and jit/pjit-compatible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Hard quantizers
+# ---------------------------------------------------------------------------
+
+
+def ternarize(x: Array, delta) -> Array:
+    """Map x -> {-1, 0, +1}: +1 if x > delta, -1 if x < -delta, else 0."""
+    return (x > delta).astype(x.dtype) - (x < -delta).astype(x.dtype)
+
+
+def binarize(x: Array) -> Array:
+    """Map x -> {-1, +1} (sign with sign(0) := +1), the BNN baseline."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def twn_delta(w: Array, axis=None, ratio: float = 0.7) -> Array:
+    """TWN threshold  delta = ratio * mean(|w|)  (Li et al., 2016).
+
+    ``axis=None`` gives a per-tensor threshold; pass reduction axes for a
+    per-output-channel threshold (e.g. ``axis=(0, 1, 2)`` for HWIO kernels).
+    """
+    return ratio * jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None)
+
+
+def twn_scale(w: Array, wq: Array, axis=None) -> Array:
+    """Optimal TWN scale: mean |w| over the non-zero support of ``wq``.
+
+    Minimizes ||w - alpha * wq||^2 for fixed ternary wq.
+    """
+    nz = (wq != 0).astype(w.dtype)
+    num = jnp.sum(jnp.abs(w) * nz, axis=axis, keepdims=axis is not None)
+    den = jnp.sum(nz, axis=axis, keepdims=axis is not None)
+    return num / jnp.maximum(den, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# STE (straight-through estimator) wrappers for QAT
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _ste_identity(x: Array, q: Array) -> Array:
+    """Forward: return q. Backward: gradient flows to x unchanged."""
+    del x
+    return q
+
+
+def _ste_fwd(x, q):
+    del x
+    return q, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste_identity.defvjp(_ste_fwd, _ste_bwd)
+
+
+def ternarize_ste(w: Array, axis=None, ratio: float = 0.7,
+                  with_scale: bool = True) -> Array:
+    """QAT weight ternarization: forward = alpha * ternarize(w), STE backward.
+
+    The gradient w.r.t. ``w`` is passed straight through (clipped implicitly
+    by the downstream Hardtanh in the paper's recipe, so no extra clipping
+    here).  ``alpha`` is treated as a constant w.r.t. the VJP (standard TWN
+    practice).
+    """
+    delta = jax.lax.stop_gradient(twn_delta(w, axis=axis, ratio=ratio))
+    wq = ternarize(jax.lax.stop_gradient(w), delta)
+    if with_scale:
+        alpha = jax.lax.stop_gradient(twn_scale(w, wq, axis=axis))
+        wq = alpha * wq
+    return _ste_identity(w, wq)
+
+
+def binarize_ste(w: Array, axis=None, with_scale: bool = True) -> Array:
+    """QAT weight binarization (XNOR-Net style): alpha * sign(w), STE grad."""
+    wq = binarize(jax.lax.stop_gradient(w))
+    if with_scale:
+        alpha = jax.lax.stop_gradient(
+            jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None))
+        wq = alpha * wq
+    return _ste_identity(w, wq)
+
+
+def hardtanh(x: Array) -> Array:
+    """Hardtanh activation, the paper's choice (covers all of {-1,0,1})."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def ternarize_act_ste(x: Array, threshold: float = 0.5) -> Array:
+    """Activation ternarization with STE through Hardtanh.
+
+    Forward: hardtanh -> threshold at +-0.5 -> {-1,0,+1}.
+    Backward: identity inside [-1, 1], zero outside (hardtanh VJP).
+    """
+    xh = hardtanh(x)
+    q = ternarize(jax.lax.stop_gradient(xh), threshold)
+    return _ste_identity(xh, q)
+
+
+def binarize_act_ste(x: Array) -> Array:
+    """Activation binarization with hardtanh STE (BNN baseline)."""
+    xh = hardtanh(x)
+    q = binarize(jax.lax.stop_gradient(xh))
+    return _ste_identity(xh, q)
+
+
+# ---------------------------------------------------------------------------
+# Statistics used by the energy model and EXPERIMENTS tables
+# ---------------------------------------------------------------------------
+
+
+def sparsity(x: Array) -> Array:
+    """Fraction of exact zeros (the paper's 'weight sparsity' column)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def trit_histogram(x: Array) -> Array:
+    """Counts of (-1, 0, +1) — input must already be ternary."""
+    return jnp.stack([jnp.sum(x == -1), jnp.sum(x == 0), jnp.sum(x == 1)])

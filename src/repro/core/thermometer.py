@@ -1,0 +1,62 @@
+"""Binary & ternary thermometer input encodings (paper §III-D).
+
+Real-valued sensor inputs (e.g. 8-bit pixels) must be presented to a
+binary/ternary datapath as vectors of {-1,(0),+1}.  The *binary thermometer*
+(Buckman et al. [68]) maps an integer x in [0, M] to an M-vector:
+
+    f(x)_i = +1 if i < x else -1
+
+The paper's novel *ternary thermometer* maps x in [0, 2M] to an M-vector:
+
+    g(x)_i = sgn(x - M) * (f(|x - M|)_i + 1) / 2
+
+so it encodes a range twice as large per vector entry and introduces zeros
+(66.3% of first-layer activations are 0 on CIFAR-10), which both silences
+adder-tree nodes (energy) and slightly improves accuracy (paper: +0.5-1.5%).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def binary_thermometer(x: Array, m: int) -> Array:
+    """f: [0, M] -> {-1,+1}^M.  Appends the M channels as a trailing axis."""
+    x = x.astype(jnp.int32)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    return jnp.where(idx < x[..., None], 1, -1).astype(jnp.int8)
+
+
+def ternary_thermometer(x: Array, m: int) -> Array:
+    """g: [0, 2M] -> {-1,0,+1}^M  (paper's Section III-D definition)."""
+    x = x.astype(jnp.int32)
+    s = jnp.sign(x - m)                      # {-1, 0, +1}
+    f = binary_thermometer(jnp.abs(x - m), m).astype(jnp.int32)
+    g = s[..., None] * ((f + 1) // 2)
+    return g.astype(jnp.int8)
+
+
+def quantize_to_levels(x: Array, levels: int) -> Array:
+    """Uniformly quantize x in [0,1] to integers [0, levels]."""
+    return jnp.clip(jnp.round(x * levels), 0, levels).astype(jnp.int32)
+
+
+def encode_image_ternary(img01: Array, m: int) -> Array:
+    """Encode an image in [0,1]^(H,W,C) to trits (H,W,C*M).
+
+    Matches the paper's CIFAR-10 setup: C=3, M=42 -> 126 input channels
+    (Table III first-layer input dim 126x32x32).
+    """
+    ids = quantize_to_levels(img01, 2 * m)
+    t = ternary_thermometer(ids, m)          # (H, W, C, M)
+    return t.reshape(*t.shape[:-2], t.shape[-2] * t.shape[-1])
+
+
+def encode_image_binary(img01: Array, m: int) -> Array:
+    """Binary-thermometer image encoding to {-1,+1}^(H,W,C*M)."""
+    ids = quantize_to_levels(img01, m)
+    t = binary_thermometer(ids, m)
+    return t.reshape(*t.shape[:-2], t.shape[-2] * t.shape[-1])

@@ -1,0 +1,1 @@
+from repro.data import cifar, pipeline, tokens  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.energy import model, switching, tiling  # noqa: F401

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of truth for kernel semantics; each kernel test
+sweeps shapes/dtypes and asserts allclose against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+TRITS_PER_BYTE = 5
+POW3 = np.array([1, 3, 9, 27, 81], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# trit codec
+# ---------------------------------------------------------------------------
+
+
+def pack_trits(t: Array) -> Array:
+    """(..., 5*G) trits -> (..., G) uint8.  Trailing dim must be 5-aligned."""
+    assert t.shape[-1] % TRITS_PER_BYTE == 0, t.shape
+    g = t.shape[-1] // TRITS_PER_BYTE
+    d = (t.astype(jnp.int32) + 1).reshape(*t.shape[:-1], g, TRITS_PER_BYTE)
+    return jnp.sum(d * jnp.asarray(POW3), axis=-1).astype(jnp.uint8)
+
+
+def unpack_trits(b: Array) -> Array:
+    """(..., G) uint8 -> (..., 5*G) trits int8."""
+    v = b.astype(jnp.int32)
+    digits = []
+    for _ in range(TRITS_PER_BYTE):
+        digits.append(v % 3)
+        v = v // 3
+    d = jnp.stack(digits, axis=-1) - 1
+    return d.reshape(*b.shape[:-1], b.shape[-1] * TRITS_PER_BYTE).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# ternary matmul (packed weights), optional fused epilogues
+# ---------------------------------------------------------------------------
+
+
+def ternary_matmul(x: Array, w_packed: Array, *,
+                   scale: Array | None = None,
+                   t_lo: Array | None = None,
+                   t_hi: Array | None = None,
+                   flip: Array | None = None) -> Array:
+    """x (M, K) @ unpack(w_packed) (K, N), K = 5 * w_packed.shape[0].
+
+    Epilogues (mutually exclusive):
+      * scale  — out = acc * scale  (TWN serving path; out dtype = x dtype
+                 for floats, f32 for int accum),
+      * t_lo/t_hi/flip — two-threshold ternarize (TNN path; out int8 trits).
+    No epilogue: raw accumulator (int32 for int8 inputs, f32 otherwise).
+    """
+    w = unpack_trits(w_packed.T).T            # (K, N) trits
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = jax.lax.dot_general(
+            x.astype(jnp.int8), w.astype(jnp.int8),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    else:
+        acc = jnp.dot(x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+    if t_lo is not None:
+        z = acc.astype(jnp.float32)
+        pos = jnp.where(flip, z < t_hi, z > t_hi)
+        neg = jnp.where(flip, z > t_lo, z < t_lo)
+        return (pos.astype(jnp.int8) - neg.astype(jnp.int8))
+    if scale is not None:
+        out = acc.astype(jnp.float32) * scale
+        return out.astype(x.dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                          else jnp.float32)
+    return acc
+
+
+def ternary_matmul_dense(x: Array, w: Array) -> Array:
+    """Unpacked trit matmul oracle (int8 x int8 -> int32)."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int8), w.astype(jnp.int8),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# ternary conv2d, NHWC x HWIO -> NHWC, optional fused thresholds
+# ---------------------------------------------------------------------------
+
+
+def ternary_conv2d(x: Array, w: Array, *, stride=(1, 1), padding=True,
+                   t_lo=None, t_hi=None, flip=None) -> Array:
+    k = w.shape[0]
+    pad = ((k // 2, k // 2),) * 2 if padding else ((0, 0), (0, 0))
+    z = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), stride, pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    if t_lo is None:
+        return z
+    zf = z.astype(jnp.float32)
+    pos = jnp.where(flip, zf < t_hi, zf > t_hi)
+    neg = jnp.where(flip, zf > t_lo, zf < t_lo)
+    return pos.astype(jnp.int8) - neg.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# thermometer encode
+# ---------------------------------------------------------------------------
+
+
+def thermometer(x: Array, m: int, ternary: bool = True) -> Array:
+    """int levels (...,) -> (..., m) trits/bits (see core.thermometer)."""
+    x = x.astype(jnp.int32)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    if not ternary:
+        return jnp.where(idx < x[..., None], 1, -1).astype(jnp.int8)
+    s = jnp.sign(x - m)
+    f = jnp.where(idx < jnp.abs(x - m)[..., None], 1, -1)
+    return (s[..., None] * ((f + 1) // 2)).astype(jnp.int8)

@@ -1,0 +1,108 @@
+"""Ternary KxK conv with fused two-threshold epilogue — the OCU array.
+
+This is the literal CUTIE regime: for the paper's design point
+(K=3, N_I=N_O=128, 32x32 feature maps) the *entire* weight tensor
+(3*3*128*128 trits) plus one whole padded input image fit comfortably in
+VMEM, so the kernel holds the weights stationary for the full layer and the
+grid walks (image, output-channel tile) only — there is no K-reduction grid
+axis and no partial-sum traffic to HBM, matching "each output channel value
+is computed in a single cycle ... no storing of partial results" (§III-C).
+
+The K*K spatial taps are a Python loop *inside* the kernel (fully unrolled
+at trace time — the filter-dimension unrolling of Listing 1), each tap being
+an (OH*OW, C_in) x (C_in, bco) int8 MXU dot.
+
+Layout: x NHWC (pre-padded outside), w HWIO, out NHWC.  The fused epilogue
+applies the folded thresholds (paper §III-C) so the int32 accumulator never
+leaves registers/VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, *rest, k: int, stride, oh: int, ow: int,
+                 fuse_threshold: bool):
+    o_ref = rest[-1]
+    ep_refs = rest[:-1]  # no scratch: accumulator lives in registers
+    sh, sw = stride
+    xv = x_ref[0]                                   # (PH, PW, Cin)
+    cin = xv.shape[-1]
+    acc = jnp.zeros((oh * ow, o_ref.shape[-1]), jnp.int32)
+    for kh in range(k):                             # completely unrolled taps
+        for kw in range(k):
+            win = jax.lax.slice(
+                xv, (kh, kw, 0),
+                (kh + sh * (oh - 1) + 1, kw + sw * (ow - 1) + 1, cin),
+                (sh, sw, 1))                        # (OH, OW, Cin)
+            acc += jax.lax.dot_general(
+                win.reshape(oh * ow, cin), w_ref[kh, kw],
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    if fuse_threshold:
+        t_lo, t_hi, flip = (r[...] for r in ep_refs)   # (1, bco)
+        z = acc.astype(jnp.float32)
+        fl = flip != 0
+        pos = jnp.where(fl, z < t_hi, z > t_hi)
+        neg = jnp.where(fl, z > t_lo, z < t_lo)
+        out = pos.astype(jnp.int8) - neg.astype(jnp.int8)
+        o_ref[0] = out.reshape(oh, ow, -1)
+    else:
+        o_ref[0] = acc.reshape(oh, ow, -1)
+
+
+def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
+                          t_lo=None, t_hi=None, flip=None,
+                          bco: int = 128, interpret: bool = False):
+    """NHWC trit conv.  x (N,H,W,Cin) int8, w (K,K,Cin,Cout) int8.
+
+    Fused thresholds (t_lo/t_hi/flip per Cout) produce int8 trits; without
+    them the raw int32 pre-activations are returned.
+    """
+    n, h, wd, cin = x.shape
+    k, _, _, cout = w.shape
+    sh, sw = stride
+    if padding:
+        p = k // 2
+        x = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+        oh, ow = -(-h // sh), -(-wd // sw)
+    else:
+        oh = (h - k) // sh + 1
+        ow = (wd - k) // sw + 1
+    ph, pw = x.shape[1], x.shape[2]
+    bco = min(bco, cout)
+    assert cout % bco == 0
+
+    fuse = t_lo is not None
+    if fuse:
+        ep = [jnp.asarray(t_lo, jnp.float32).reshape(1, cout),
+              jnp.asarray(t_hi, jnp.float32).reshape(1, cout),
+              jnp.asarray(flip).astype(jnp.int8).reshape(1, cout)]
+        out_dtype = jnp.int8
+    else:
+        ep, out_dtype = [], jnp.int32
+    ep_specs = [pl.BlockSpec((1, bco), lambda i, j: (0, j)) for _ in ep]
+
+    kernel = functools.partial(
+        _conv_kernel, k=k, stride=(sh, sw), oh=oh, ow=ow,
+        fuse_threshold=fuse)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n, cout // bco),
+        in_specs=[
+            pl.BlockSpec((1, ph, pw, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, bco), lambda i, j: (0, 0, 0, j)),
+            *ep_specs,
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, bco), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x.astype(jnp.int8), w.astype(jnp.int8), *ep)

@@ -1,0 +1,107 @@
+"""Pallas kernels for the 5-trits-per-byte codec (paper §III-A).
+
+Pure VPU (elementwise) kernels: base-3 digit assembly / disassembly over
+2-D tiles.  Used at the HBM<->VMEM boundary of the serving path and as the
+wire codec for ternary collectives / checkpoint compression.
+
+Layout contract (shared with `repro.kernels.ref` and `repro.core.codec`):
+trit index k maps to (byte g = k // 5, digit i = k % 5), little-endian in i.
+Both kernels work on (R, 5*G) <-> (R, G) 2-D views; callers reshape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TRITS_PER_BYTE = 5
+
+
+def _pack_kernel(t_ref, o_ref):
+    t = t_ref[...].astype(jnp.int32) + 1            # (br, 5*bg) digits
+    r, kg = t.shape
+    d = t.reshape(r, kg // TRITS_PER_BYTE, TRITS_PER_BYTE)
+    acc = d[..., 0]
+    for i, p in enumerate((3, 9, 27, 81)):          # unrolled base-3 horner
+        acc = acc + d[..., i + 1] * p
+    o_ref[...] = acc.astype(jnp.uint8)
+
+
+def _unpack_kernel(b_ref, o_ref):
+    v = b_ref[...].astype(jnp.int32)                # (br, bg)
+    digits = []
+    for _ in range(TRITS_PER_BYTE):
+        digits.append(v % 3)
+        v = v // 3
+    d = jnp.stack(digits, axis=-1) - 1              # (br, bg, 5)
+    o_ref[...] = d.reshape(v.shape[0], -1).astype(jnp.int8)
+
+
+def pack_trits_pallas(t, *, br: int = 256, bg: int = 128,
+                      interpret: bool = False):
+    """(R, 5*G) int8 trits -> (R, G) uint8."""
+    r, k = t.shape
+    assert k % TRITS_PER_BYTE == 0
+    g = k // TRITS_PER_BYTE
+    br, bg = min(br, r), min(bg, g)
+    assert r % br == 0 and g % bg == 0
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(r // br, g // bg),
+        in_specs=[pl.BlockSpec((br, bg * TRITS_PER_BYTE),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bg), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, g), jnp.uint8),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(t)
+
+
+def unpack_trits_pallas(b, *, br: int = 256, bg: int = 128,
+                        interpret: bool = False):
+    """(R, G) uint8 -> (R, 5*G) int8 trits."""
+    r, g = b.shape
+    br, bg = min(br, r), min(bg, g)
+    assert r % br == 0 and g % bg == 0
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=(r // br, g // bg),
+        in_specs=[pl.BlockSpec((br, bg), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bg * TRITS_PER_BYTE),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, g * TRITS_PER_BYTE), jnp.int8),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(b)
+
+
+def _thermo_kernel(x_ref, o_ref, *, m: int, ternary: bool):
+    x = x_ref[...].astype(jnp.int32)                # (br, 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], m), 1)
+    if ternary:
+        s = jnp.sign(x - m)
+        f = jnp.where(idx < jnp.abs(x - m), 1, -1)
+        o_ref[...] = (s * ((f + 1) // 2)).astype(jnp.int8)
+    else:
+        o_ref[...] = jnp.where(idx < x, 1, -1).astype(jnp.int8)
+
+
+def thermometer_pallas(x, m: int, *, ternary: bool = True, br: int = 512,
+                       interpret: bool = False):
+    """int32 levels (R,) -> (R, m) thermometer trits/bits (paper §III-D)."""
+    import functools
+    r = x.shape[0]
+    br = min(br, r)
+    assert r % br == 0
+    return pl.pallas_call(
+        functools.partial(_thermo_kernel, m=m, ternary=ternary),
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, m), jnp.int8),
+        interpret=interpret,
+    )(x.reshape(r, 1).astype(jnp.int32))

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+Two passes per cell:
+
+  1. FULL pass — the production config (scan-over-layers), lowered with
+     explicit in/out shardings and compiled.  Proves the sharding config is
+     coherent (no mismatch, no unsupported collective), and provides
+     `memory_analysis()` (correct under scan: loop buffers are reused) —
+     this is the deliverable gate.  Runs on BOTH meshes.
+
+  2. COST pass (single-pod) — XLA's HloCostAnalysis counts while bodies
+     once (measured), so roofline terms come from *unrolled* depth-reduced
+     compiles at two depths; FLOPs / bytes / collective wire-bytes are
+     linear in depth for homogeneous stacks, so the two points determine
+     the full-depth numbers exactly (intercept captures embed/head/loss).
+
+Results cached as JSON per cell in results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single multi --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+import repro.configs as configs
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import common
+from repro.models.config import SHAPES, shapes_for
+from repro.roofline import hlo, params as pcount
+
+COST_DEPTHS = {
+    # family -> (d1, d2); hybrid must be multiples of attn_every
+    "dense": (2, 4), "vlm": (2, 4), "moe": (2, 4), "ssm": (2, 4),
+    "hybrid": (6, 12), "encdec": (2, 4),
+}
+
+
+def with_depth(cfg, d):
+    kw = {"scan_layers": False}
+    if cfg.family == "moe":
+        kw["n_layers"] = cfg.first_dense + d
+    elif cfg.family == "encdec":
+        kw["n_layers"] = d
+        kw["enc_layers"] = d
+    else:
+        kw["n_layers"] = d
+    return cfg.replace(**kw)
+
+
+def depth_of(cfg) -> int:
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.first_dense
+    return cfg.n_layers
+
+
+def _compile_cell(cfg, shape_name, mesh, *, unroll):
+    jitted, args = steps.build_cell(cfg, shape_name, mesh, unroll=unroll)
+    with common.use_mesh(mesh):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for kv in pairs or []:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "false"):
+            v = v == "true"
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             do_cost: bool = True, overrides: dict | None = None) -> dict:
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    res: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "chips": int(n_chips), "overrides": overrides or {}}
+
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape_name, mesh, unroll=False)
+    res["compile_s"] = round(time.time() - t0, 2)
+    res["memory"] = hlo.memory(compiled)
+    res["scanned_cost_counted_once"] = hlo.extract(compiled)
+    del compiled
+
+    if do_cost and mesh_kind == "single":
+        d1, d2 = COST_DEPTHS[cfg.family]
+        lfull = depth_of(cfg)
+        cost_cfg = cfg   # same chunking as the full pass (consistency)
+        points = []
+        for d in (d1, d2):
+            t0 = time.time()
+            cd = _compile_cell(with_depth(cost_cfg, d), shape_name, mesh,
+                               unroll=True)
+            ext = hlo.extract(cd)
+            ext["depth"] = d
+            ext["compile_s"] = round(time.time() - t0, 2)
+            points.append(ext)
+            del cd
+        res["cost_points"] = points
+
+        def lin(get):
+            c1, c2 = get(points[0]), get(points[1])
+            slope = (c2 - c1) / (d2 - d1)
+            return c1 + slope * (lfull - d1), slope
+
+        flops, flops_per_layer = lin(lambda e: e["flops"])
+        bytes_, bytes_per_layer = lin(lambda e: e["bytes"])
+        wire, wire_per_layer = lin(
+            lambda e: e["collectives"]["total_wire_bytes"])
+        res["extrapolated"] = {
+            "depth_full": lfull,
+            "flops": flops, "flops_per_layer": flops_per_layer,
+            "bytes": bytes_, "bytes_per_layer": bytes_per_layer,
+            "collective_wire_bytes": wire,
+            "collective_wire_per_layer": wire_per_layer,
+            "top_collectives_d2": points[1]["collectives"]["top"],
+            "by_op_d2": points[1]["collectives"]["by_op"],
+        }
+        res["params"] = pcount.count_params(cfg)
+        shape = SHAPES[shape_name]
+        res["tokens_global"] = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="+", default=["all"])
+    ap.add_argument("--shape", nargs="+", default=["all"])
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"],
+                    choices=["single", "multi"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[], dest="overrides",
+                    help="ArchConfig overrides, e.g. quant=ternary_packed")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (perf variants)")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if args.arch == ["all"] else [
+        configs.ALIASES.get(a, a) for a in args.arch]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        cfg = configs.get(arch)
+        shape_names = (shapes_for(cfg) if args.shape == ["all"]
+                       else args.shape)
+        for shape_name in shape_names:
+            if shape_name not in shapes_for(cfg):
+                print(f"[skip] {arch} x {shape_name}: long-context shape "
+                      f"skipped for full-attention family (DESIGN.md §5)")
+                continue
+            for mesh_kind in args.mesh:
+                tag = f"{arch}__{shape_name}__{mesh_kind}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[run] {tag} ...", flush=True)
+                try:
+                    t0 = time.time()
+                    res = run_cell(arch, shape_name, mesh_kind,
+                                   do_cost=not args.no_cost,
+                                   overrides=_parse_overrides(
+                                       args.overrides))
+                    res["wall_s"] = round(time.time() - t0, 1)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    mem = res["memory"]["peak_gb"]
+                    print(f"  ok in {res['wall_s']}s  peak/dev "
+                          f"{mem:.2f} GB", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"  FAIL: {e}", flush=True)
+
+    print(f"\n{len(failures)} failures")
+    for tag, err in failures:
+        print(" ", tag, err[:160])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

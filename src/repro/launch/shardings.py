@@ -1,0 +1,167 @@
+"""Parameter / optimizer-state / batch PartitionSpecs.
+
+Rules are path-pattern based over the abstract parameter pytree, so one
+table covers every architecture.  Dimensions that don't divide the mesh
+axis fall back to replication (checked against the actual shapes), so a
+single rule set serves the 16-way production mesh and tiny test meshes.
+
+ZeRO-1: optimizer moments take the parameter spec *plus* a `data`-axis
+sharding on the first still-replicated dimension that divides the DP axis —
+optimizer state is fully flat across the pod at scale.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ordered (pattern, spec-builder) table; first match wins.
+# `d` below = ndim of the leaf; specs are padded with leading None for
+# stacked layer dims (we match on the trailing structure).
+_RULES: list[tuple[str, P]] = [
+    (r"embed$", P("model", None)),
+    (r"head$", P(None, "model")),
+    (r"(enc_pos|dec_pos)$", P(None, None)),
+    # attention
+    (r"(wq|wk|wv)/w$", P(None, "model")),
+    (r"(wq|wk|wv)/w_packed$", P(None, "model")),
+    (r"(wq|wk|wv)/(b|scale)$", P("model")),
+    (r"wo/w$", P("model", None)),
+    (r"wo/w_packed$", P("model", None)),
+    (r"wo/(b|scale)$", P(None)),
+    # dense mlp
+    (r"(gate|up)/w$", P(None, "model")),
+    (r"(gate|up)/w_packed$", P(None, "model")),
+    (r"(gate|up)/(b|scale)$", P("model")),
+    (r"down/w$", P("model", None)),
+    (r"down/w_packed$", P("model", None)),
+    (r"down/(b|scale)$", P(None)),
+    # moe
+    (r"router$", P(None, None)),
+    (r"(gate_proj|up_proj|down_proj)$", P("model", None, None)),
+    # mamba2
+    (r"(wz|wx)/w$", P(None, "model")),
+    (r"(wz|wx)/w_packed$", P(None, "model")),
+    (r"(wz|wx)/(b|scale)$", P("model")),
+    (r"(wb|wc|wdt)/", P(None, None)),
+    (r"conv_x/w$", P(None, "model")),
+    (r"conv_x/b$", P("model")),
+    (r"(conv_b|conv_c)/", P(None)),
+    (r"(A_log|D|dt_bias)$", P(None)),
+    (r"out_proj/w$", P("model", None)),
+    (r"out_proj/w_packed$", P("model", None)),
+    (r"out_proj/(b|scale)$", P(None)),
+    # llava projector
+    (r"mm_proj/fc1/w$", P(None, "model")),
+    (r"mm_proj/fc2/w$", P("model", None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _fits(spec: P, shape, mesh) -> P:
+    """Replicate any axis whose dim doesn't divide its mesh axis."""
+    fixed = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        ok = True
+        for n in names:
+            if n not in mesh.axis_names:
+                ok = False
+                break
+            size *= mesh.shape[n]
+        fixed.append(entry if ok and dim % size == 0 else None)
+    return P(*fixed)
+
+
+def spec_for_param(path_str: str, shape, mesh) -> P:
+    ndim = len(shape)
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            spec_t = tuple(spec)
+            if len(spec_t) < ndim:      # stacked layer dims: pad leading None
+                spec_t = (None,) * (ndim - len(spec_t)) + spec_t
+            elif len(spec_t) > ndim:
+                spec_t = spec_t[-ndim:]
+            return _fits(P(*spec_t), shape, mesh)
+    return P(*([None] * ndim))          # default: replicated
+
+
+def param_specs(abstract_params: Any, mesh) -> Any:
+    def leaf(path, x):
+        return spec_for_param(_path_str(path), x.shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def zero1_specs(abstract_params: Any, pspecs: Any, mesh) -> Any:
+    """Moment specs: param spec + DP sharding on one replicated axis."""
+    dp_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+    if not dp_axes:
+        return pspecs
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+
+    def leaf(x, spec):
+        entries = list(spec) + [None] * (x.ndim - len(tuple(spec)))
+        for i, (dim, e) in enumerate(zip(x.shape, entries)):
+            if e is None and dim % dp == 0 and dim >= dp:
+                entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(leaf, abstract_params, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(abstract_params: Any, pspecs: Any, mesh) -> Any:
+    z = zero1_specs(abstract_params, pspecs, mesh)
+    return {"mu": z, "nu": z, "step": P()}
+
+
+def resolve(spec: P, mesh) -> P:
+    """Drop axes not present on this mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve(s, mesh)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def fit_named(mesh, spec_tree, struct_tree):
+    """NamedShardings with axes dropped where the dim doesn't divide the
+    mesh axis (e.g. batch=1 decode, enc_seq=1500 cross caches)."""
+    return jax.tree.map(
+        lambda st, sp: NamedSharding(
+            mesh, _fits(resolve(sp, mesh), st.shape, mesh)),
+        struct_tree, spec_tree)

@@ -1,0 +1,179 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+`build_cell(cfg, shape_name, mesh)` returns everything the dry-run, the
+trainer and the server need: the jitted step function with explicit
+in/out shardings, and ShapeDtypeStruct stand-ins for every input (the
+shannon/kernels pattern — weak-type-correct, shardable, no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import shardings as SH
+from repro.models import decoding as DEC
+from repro.models import transformer as TF
+from repro.models.config import SHAPES, ArchConfig, ShapeSpec
+from repro.optim import adam
+
+BATCH_AXES = ("pod", "data")
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        functools.partial(TF.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ArchConfig):
+    return jax.eval_shape(adam.init_state, abstract_params(cfg))
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract training/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.family == "vlm":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.img_tokens),
+                                             jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.img_tokens, cfg.d_vision), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(out["tokens"].shape, jnp.int32)
+    return out
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    bspec = P(BATCH_AXES)
+    out = {"tokens": P(BATCH_AXES, None)}
+    if cfg.family == "vlm":
+        out["patches"] = P(BATCH_AXES, None, None)
+    if cfg.family == "encdec":
+        out["frames"] = P(BATCH_AXES, None, None)
+    if shape.kind == "train":
+        out["labels"] = P(BATCH_AXES, None)
+    del bspec
+    return out
+
+
+def decode_struct(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: DEC.init_caches(cfg, b, s))
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "caches": caches,
+    }
+
+
+def decode_pspecs(cfg: ArchConfig):
+    return {
+        "token": P(BATCH_AXES, None),
+        "pos": P(BATCH_AXES),
+        "caches": DEC.cache_pspecs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, adam_cfg: adam.AdamConfig,
+                    *, unroll: bool = False):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return TF.forward_loss(p, batch, cfg, unroll=unroll)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adam.apply_update(
+            params, grads, opt_state, adam_cfg)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, unroll: bool = False):
+    def prefill_step(params, batch):
+        return TF.forward_logits(params, batch, cfg, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, unroll: bool = False):
+    def serve_step(params, token, caches, pos):
+        return DEC.decode_step(params, token, caches, pos, cfg,
+                               unroll=unroll)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly (the dry-run / launcher entry)
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh,
+               adam_cfg: adam.AdamConfig | None = None,
+               *, unroll: bool = False):
+    """Returns (jitted_fn, abstract_args tuple) for one (arch, shape)."""
+    shape = SHAPES[shape_name]
+    aparams = abstract_params(cfg)
+    pspecs = SH.param_specs(aparams, mesh)
+    psh = SH.named(mesh, pspecs)
+
+    if shape.kind == "train":
+        adam_cfg = adam_cfg or adam.AdamConfig()
+        ospecs = SH.opt_state_specs(aparams, pspecs, mesh)
+        osh = SH.named(mesh, ospecs)
+        bspecs = SH.named(mesh, batch_pspecs(cfg, shape))
+        fn = make_train_step(cfg, adam_cfg, unroll=unroll)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(psh, osh, bspecs),
+            out_shardings=(psh, osh,
+                           SH.named(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, abstract_opt_state(cfg), batch_struct(cfg, shape))
+        return jitted, args
+
+    if shape.kind == "prefill":
+        bspecs = SH.named(mesh, batch_pspecs(cfg, shape))
+        fn = make_prefill_step(cfg, unroll=unroll)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(psh, bspecs),
+            out_shardings=SH.named(mesh, P(BATCH_AXES, None, "model")),
+        )
+        return jitted, (aparams, batch_struct(cfg, shape))
+
+    # decode — specs are fitted to the concrete shapes (batch=1 long-context
+    # cells and non-divisible cache dims replicate instead of erroring).
+    dstruct = decode_struct(cfg, shape)
+    dspecs = decode_pspecs(cfg)
+    fn = make_decode_step(cfg, unroll=unroll)
+    b = shape.global_batch
+    vp = TF.vocab_padded(cfg)
+    logits_struct = jax.ShapeDtypeStruct((b, 1, vp), jnp.bfloat16)
+    cache_sh = SH.fit_named(mesh, dspecs["caches"], dstruct["caches"])
+    jitted = jax.jit(
+        fn,
+        in_shardings=(psh,
+                      SH.fit_named(mesh, dspecs["token"], dstruct["token"]),
+                      cache_sh,
+                      SH.fit_named(mesh, dspecs["pos"], dstruct["pos"])),
+        out_shardings=(SH.fit_named(mesh, P(BATCH_AXES, None, "model"),
+                                    logits_struct),
+                       cache_sh),
+        donate_argnums=(2,),
+    )
+    args = (aparams, dstruct["token"], dstruct["caches"], dstruct["pos"])
+    return jitted, args

@@ -1,0 +1,112 @@
+"""Training driver: ``python -m repro.launch.train --arch llama3.2-1b ...``.
+
+On a TPU pod this launches the production mesh and full config; in this
+CPU container the default is the reduced (smoke) config on a small mesh so
+the same entry point is runnable end-to-end (examples use it).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.data import pipeline, tokens
+from repro.launch import mesh as M
+from repro.launch import shardings as SH
+from repro.models import common
+from repro.models import transformer as TF
+from repro.models.config import SHAPES, ShapeSpec, reduce_for_smoke
+from repro.optim import adam
+from repro.train import loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full-size architecture (TPU pods)")
+    ap.add_argument("--quant", default=None,
+                    choices=[None, "none", "ternary"],
+                    help="override the config's weight quantization")
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "ternary"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at-step", type=int, default=-1)
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto' (all local devices as data axis), 'none'")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if not args.full_config:
+        cfg = reduce_for_smoke(cfg)
+    if args.quant:
+        cfg = cfg.replace(quant=args.quant)
+
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    src = tokens.for_arch(cfg, shape)
+
+    mesh = None
+    if args.mesh == "auto" and len(jax.devices()) > 1:
+        mesh = M.make_mesh((len(jax.devices()),), ("data",))
+
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+
+    def data_fn(step: int):
+        b = src.batch(step)
+        extra = {}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(step)
+            extra["frames"] = rng.normal(size=(
+                args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(step)
+            extra["patches"] = rng.normal(size=(
+                args.batch, cfg.img_tokens, cfg.d_vision)).astype(np.float32)
+            b["tokens"] = b["tokens"][:, : args.seq - cfg.img_tokens]
+            b["labels"] = b["labels"][:, : args.seq - cfg.img_tokens]
+        return {**b, **extra}
+
+    def loss_fn(p, batch):
+        loss, metrics = TF.forward_loss(p, batch, cfg)
+        return loss, metrics
+
+    tcfg = loop.TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, log_every=args.log_every,
+        fail_at_step=args.fail_at_step, grad_compress=args.grad_compress)
+    acfg = adam.AdamConfig(lr=args.lr, total_steps=args.steps,
+                           warmup_steps=max(1, args.steps // 10))
+
+    ctx = common.use_mesh(mesh) if mesh is not None else _null()
+    with ctx:
+        result = loop.train(loss_fn, params, data_fn, tcfg, acfg, mesh=mesh)
+
+    last = result["history"][-1]
+    print(f"final: step={last['step']} loss={last['loss']:.4f} "
+          f"xent={last.get('xent', float('nan')):.4f}")
+    if result["restored_from"] is not None:
+        print(f"(restored from checkpoint step {result['restored_from']})")
+    if result["stragglers"]:
+        print(f"stragglers: {len(result['stragglers'])}")
+    return result
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: shared layers + the 10 assigned architectures + CUTIE CNN."""
+
+from repro.models import (attention, common, config, cutie_cnn, decoding,
+                          losses, mamba2, mlp, moe, transformer)
+
+__all__ = ["attention", "common", "config", "cutie_cnn", "decoding",
+           "losses", "mamba2", "mlp", "moe", "transformer"]

@@ -1,0 +1,238 @@
+"""Shared model substrate: norms, linears (with ternary QAT / packed-trit
+serving modes), RoPE, sharding helpers, scan-with-unroll.
+
+Sharding philosophy: model code is written mesh-agnostic.  `shard(x, spec)`
+applies a `with_sharding_constraint` only when an ambient mesh has been
+installed by the launcher (`set_mesh`); under smoke tests (single device, no
+mesh) every constraint is a no-op, so the same code path is exercised
+everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import ternary as T
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Ambient mesh / sharding constraints
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+def get_manual_axes() -> frozenset:
+    return getattr(_STATE, "manual_axes", frozenset())
+
+
+@contextlib.contextmanager
+def manual_axes(axes):
+    """Axes currently under shard_map manual control (e.g. 'pod' inside the
+    pipeline) — `shard()` must not constrain over them."""
+    prev = get_manual_axes()
+    _STATE.manual_axes = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _STATE.manual_axes = prev
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def _resolve_axes(spec: P, mesh) -> P:
+    """Drop mesh axes that don't exist on the current mesh (e.g. 'pod' on a
+    single-pod mesh) or that are under manual shard_map control."""
+    names = set(mesh.axis_names) - set(get_manual_axes())
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def shard(x: Array, *spec) -> Array:
+    """Constrain activation sharding if a mesh is ambient, else no-op."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    p = _resolve_axes(P(*spec), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+BATCH = ("pod", "data")     # canonical batch-sharding axes
+MODEL = "model"
+
+
+# ---------------------------------------------------------------------------
+# Scan that can be unrolled for HLO cost extraction
+# ---------------------------------------------------------------------------
+
+
+def maybe_scan(body, carry, xs, *, length=None, unroll: bool = False):
+    """`lax.scan` or a trace-time Python loop (identical semantics).
+
+    The Python loop is used by the dry-run cost-extraction pass, because
+    XLA's HloCostAnalysis counts a while-loop body exactly once regardless
+    of trip count (measured; see DESIGN.md §8 / launch/dryrun.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype=jnp.bfloat16, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    std = shape[-1] ** -0.5           # keeps tied-head logits O(1)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6, bf16_mul: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    if bf16_mul:
+        # f32 reduction only; the full-width normalize stays in x.dtype so
+        # no f32 residual-stream buffers cross fusion boundaries (§Perf C4)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"]
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def layernorm_init(dim, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Linear with quantization modes (the paper's technique as a feature)
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in, d_out, *, bias=False, dtype=jnp.bfloat16,
+                quant: str = "none"):
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    if quant == "ternary_packed":
+        # Serving representation: pure trits packed 5/byte along d_in,
+        # plus the folded per-column TWN scale (paper §III-A/§III-C).
+        w = p.pop("w").astype(jnp.float32)
+        delta = T.twn_delta(w, axis=(0,))
+        trits = T.ternarize(w, delta)
+        alpha = T.twn_scale(w, trits, axis=(0,)).reshape(-1)
+        pad = (-d_in) % 5
+        trits = jnp.pad(trits, ((0, pad), (0, 0)))
+        p["w_packed"] = kref.pack_trits(trits.T.astype(jnp.int8)).T
+        p["scale"] = alpha.astype(jnp.float32)
+    return p
+
+
+def linear(p, x, *, quant: str = "none", d_in: int | None = None):
+    """Apply a (possibly ternary) linear layer.
+
+    quant modes:
+      none           — plain bf16 matmul,
+      ternary        — QAT: STE-ternarized weights (per-column scale),
+      ternary_packed — serving: decode packed trits (XLA path; the Pallas
+                       kernel `kernels.ops.ternary_matmul` implements the
+                       same contract fused, used when on TPU).
+    """
+    if quant == "ternary_packed":
+        w = kref.unpack_trits(p["w_packed"].T).T          # (d_in_pad, d_out)
+        if d_in is None:
+            d_in = x.shape[-1]
+        w = w[:d_in].astype(x.dtype) * p["scale"].astype(x.dtype)
+    elif quant == "ternary":
+        w = T.ternarize_ste(p["w"], axis=(0,))
+    else:
+        w = p["w"]
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x (..., S, H, D), positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)

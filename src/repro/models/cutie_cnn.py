@@ -1,0 +1,153 @@
+"""Trainable QAT model of the paper's CIFAR-10 CNN (Table III).
+
+Training graph (float, differentiable):
+    thermometer-encoded input (trits as float)
+    -> [conv -> BN -> Hardtanh -> ternarize_STE (+pool)] x 8
+    -> FC -> logits
+with weights ternarized via STE (TWN per-channel scale) or — for the INQ
+experiments — kept latent and quantized by the `repro.core.inq` schedule.
+
+`to_program` compiles trained parameters into a bit-true
+`core.engine.CutieProgram` (pure trits + folded thresholds), which is what
+the energy model and the functional-parity tests consume.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cutie_cnn import CutieCNNConfig
+from repro.core import engine, folding, inq
+from repro.core import ternary as T
+
+Array = jax.Array
+
+
+def init_params(cfg: CutieCNNConfig, key) -> dict:
+    ks = jax.random.split(key, len(cfg.layout) + 1)
+    layers = []
+    c_in = cfg.in_channels
+    for i, (op, mult, pool) in enumerate(cfg.layout):
+        c_out = cfg.width * mult
+        fan_in = 9 * c_in
+        w = jax.random.normal(ks[i], (3, 3, c_in, c_out),
+                              jnp.float32) * fan_in ** -0.5
+        layers.append({
+            "w": w,
+            "gamma": jnp.ones((c_out,), jnp.float32),
+            "beta": jnp.zeros((c_out,), jnp.float32),
+            "mean": jnp.zeros((c_out,), jnp.float32),
+            "var": jnp.ones((c_out,), jnp.float32),
+        })
+        c_in = c_out
+    fc = jax.random.normal(ks[-1], (cfg.width, cfg.n_classes),
+                           jnp.float32) * cfg.width ** -0.5
+    return {"layers": layers, "fc": fc}
+
+
+def _quant_w(w, mode: str):
+    axes = tuple(range(w.ndim - 1))        # per-output-channel reduction
+    if mode == "ternary":
+        return T.ternarize_ste(w, axis=axes)
+    if mode == "binary":
+        return T.binarize_ste(w, axis=axes)
+    return w
+
+
+def _quant_act(x, mode: str):
+    if mode == "ternary":
+        return T.ternarize_act_ste(x)
+    if mode == "binary":
+        return T.binarize_act_ste(x)
+    return x
+
+
+def _batchnorm(lp, z, train: bool, momentum: float = 0.9):
+    """Returns (normalized, updated (mean, var))."""
+    if train:
+        mu = jnp.mean(z, axis=(0, 1, 2))
+        var = jnp.var(z, axis=(0, 1, 2))
+        new_mean = momentum * lp["mean"] + (1 - momentum) * mu
+        new_var = momentum * lp["var"] + (1 - momentum) * var
+    else:
+        mu, var = lp["mean"], lp["var"]
+        new_mean, new_var = lp["mean"], lp["var"]
+    y = lp["gamma"] * (z - mu) * jax.lax.rsqrt(var + 1e-5) + lp["beta"]
+    return y, (new_mean, new_var)
+
+
+def forward(params, x, cfg: CutieCNNConfig, *, train: bool = True,
+            inq_state=None):
+    """x: thermometer trits as float (N, 32, 32, in_channels).
+
+    Returns (logits, new_bn_stats list).  When ``inq_state`` is given the
+    weights come from the INQ mask/q combination instead of plain STE
+    (the INQ experiments of Table IV).
+    """
+    bn_updates = []
+    if inq_state is not None:
+        params = dict(params,
+                      layers=inq.apply(inq_state["layers"],
+                                       params["layers"]))
+    for i, ((op, mult, pool), lp) in enumerate(
+            zip(cfg.layout, params["layers"])):
+        w = lp["w"] if inq_state is not None else _quant_w(
+            lp["w"], cfg.weight_mode)
+        z = jax.lax.conv_general_dilated(
+            x, w, (1, 1), ((1, 1), (1, 1)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y, stats = _batchnorm(lp, z, train)
+        bn_updates.append(stats)
+        # pooling happens BEFORE the activation quantizer — the hardware
+        # pools pre-threshold integers (paper Fig. 5; engine._pool_pre_
+        # threshold), and BN is affine so pool(BN(z)) == BN(pool(z)).
+        if pool is not None:
+            kind, win = pool
+            n, h, wdt, c = y.shape
+            yr = y.reshape(n, h // win, win, wdt // win, win, c)
+            y = (jnp.max(yr, axis=(2, 4)) if kind == "max"
+                 else jnp.mean(yr, axis=(2, 4)))
+        x = _quant_act(y, cfg.act_mode)
+    feats = x.reshape(x.shape[0], -1)
+    w_fc = _quant_w(params["fc"], cfg.weight_mode) \
+        if inq_state is None else params["fc"]
+    return feats @ w_fc, bn_updates
+
+
+def loss_fn(params, batch, cfg: CutieCNNConfig, *, train=True,
+            inq_state=None):
+    logits, bn_updates = forward(params, batch["x"], cfg, train=train,
+                                 inq_state=inq_state)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(
+        logp, batch["y"][:, None], axis=1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+    return loss, {"acc": acc, "bn": bn_updates}
+
+
+def apply_bn_updates(params, bn_updates):
+    layers = []
+    for lp, (m, v) in zip(params["layers"], bn_updates):
+        layers.append(dict(lp, mean=m, var=v))
+    return dict(params, layers=layers)
+
+
+def to_program(params, cfg: CutieCNNConfig,
+               instance: engine.CutieInstance = engine.GF22_SCM,
+               inq_state=None) -> engine.CutieProgram:
+    """Compile trained QAT params into the bit-true CUTIE program."""
+    if inq_state is not None:
+        params = dict(params,
+                      layers=inq.apply(inq_state["layers"],
+                                       params["layers"]))
+    instrs = []
+    for (op, mult, pool), lp in zip(cfg.layout, params["layers"]):
+        w = lp["w"]
+        if inq_state is None:
+            w = jnp.asarray(_quant_w(w, cfg.weight_mode))
+        instrs.append(engine.compile_layer(
+            w, dict(gamma=lp["gamma"], beta=lp["beta"], mean=lp["mean"],
+                    var=lp["var"]),
+            pool=pool))
+    return engine.CutieProgram(instrs, instance)

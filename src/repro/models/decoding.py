@@ -1,0 +1,322 @@
+"""Serving paths: prefill-with-cache and single-token decode steps.
+
+Cache layout: stacked over layers, (L, B, T, Hk, Dh), with the sequence
+axis sharded over `model` (flash-decoding; see models.attention).  SSM
+archs carry (L, B, H, P, N) states + conv buffers instead — constant in
+sequence length, which is what makes the long_500k cell tractable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as C
+from repro.models import mamba2, mlp, moe
+from repro.models import transformer as TF
+from repro.models.common import BATCH, MODEL, maybe_scan, shard
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    hk, dh = cfg.n_kv, cfg.d_head
+    kdt = jnp.dtype(cfg.kv_dtype)
+    kv = lambda n: {  # noqa: E731
+        "k": jnp.zeros((n, batch, max_len, hk, dh), kdt),
+        "v": jnp.zeros((n, batch, max_len, hk, dh), kdt),
+    }
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": kv(cfg.n_layers)}
+    stack = lambda st: jax.tree.map(  # noqa: E731
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), st)
+    if cfg.family == "ssm":
+        return {"ssm": stack(mamba2.init_state(cfg, batch))}
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        return {"ssm": stack(mamba2.init_state(cfg, batch)),
+                "kv": kv(n_attn)}
+    if cfg.family == "encdec":
+        enc = {
+            "k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, hk, dh), kdt),
+            "v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, hk, dh), kdt),
+        }
+        return {"kv": kv(cfg.n_layers), "cross": enc}
+    raise ValueError(cfg.family)
+
+
+def cache_pspecs(cfg: ArchConfig):
+    """PartitionSpecs matching init_caches (seq over model)."""
+    from jax.sharding import PartitionSpec as P
+    kvspec = {"k": P(None, BATCH, MODEL, None, None),
+              "v": P(None, BATCH, MODEL, None, None)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"kv": kvspec}
+    ssm_spec = {"conv_x": P(None, BATCH, None, MODEL),
+                "conv_b": P(None, BATCH, None, None),
+                "conv_c": P(None, BATCH, None, None),
+                "ssm": P(None, BATCH, MODEL, None, None)}
+    if cfg.family == "ssm":
+        return {"ssm": ssm_spec}
+    if cfg.family == "hybrid":
+        return {"ssm": ssm_spec, "kv": kvspec}
+    if cfg.family == "encdec":
+        return {"kv": kvspec, "cross": kvspec}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(p, token, caches, pos, cfg: ArchConfig, *, unroll=False,
+                frames_cache=None):
+    """token (B, 1) int32; pos scalar int32.  Returns (logits, new caches)."""
+    x = TF._embed(p, token, cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, kv = _decode_attn_stack(p, x, caches["kv"], pos, cfg, unroll)
+        new_caches = {"kv": kv}
+    elif cfg.family == "ssm":
+        x, st = _decode_ssm_stack(p, x, caches["ssm"], cfg, unroll)
+        new_caches = {"ssm": st}
+    elif cfg.family == "hybrid":
+        x, st, kv = _decode_hybrid_stack(
+            p, x, caches["ssm"], caches["kv"], pos, cfg, unroll)
+        new_caches = {"ssm": st, "kv": kv}
+    elif cfg.family == "encdec":
+        x, kv = _decode_encdec_stack(
+            p, x, caches["kv"], caches["cross"], pos, cfg, unroll)
+        new_caches = {"kv": kv, "cross": caches["cross"]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = TF._norm(cfg, p["ln_f"], x)
+    logits = x @ TF.head_weight(p, cfg)
+    return shard(logits, BATCH, None, MODEL), new_caches
+
+
+def _decode_attn_stack(p, x, kv, pos, cfg, unroll):
+    def body(carry, inp):
+        h = carry
+        lp, ck, cv = inp
+        a, newc = attn.decode_attention(
+            lp["attn"], TF._norm(cfg, lp["ln1"], h), cfg,
+            {"k": ck, "v": cv}, pos)
+        h = h + a
+        if cfg.family == "moe" and "moe" in lp:
+            y, _ = moe.apply(lp["moe"], TF._norm(cfg, lp["ln2"], h), cfg)
+        else:
+            y = mlp.apply(lp["mlp"], TF._norm(cfg, lp["ln2"], h), cfg)
+        return h + y, (newc["k"], newc["v"])
+
+    if cfg.family == "moe" and cfg.first_dense:
+        # leading dense layers use the first cache slots
+        nd = cfg.first_dense
+        dense_cfg = cfg.replace(d_ff=cfg.d_ff or 4 * cfg.d_model)
+        xs_d = (p["dense_layers"], kv["k"][:nd], kv["v"][:nd])
+        x, kv_d = maybe_scan(
+            functools.partial(_dense_decode_body, cfg=dense_cfg, pos=pos),
+            x, xs_d, unroll=unroll)
+        x, kv_m = maybe_scan(body, x,
+                             (p["layers"], kv["k"][nd:], kv["v"][nd:]),
+                             unroll=unroll)
+        k = jnp.concatenate([kv_d[0], kv_m[0]])
+        v = jnp.concatenate([kv_d[1], kv_m[1]])
+        return x, {"k": k, "v": v}
+
+    x, (k, v) = maybe_scan(body, x, (p["layers"], kv["k"], kv["v"]),
+                           unroll=unroll)
+    return x, {"k": k, "v": v}
+
+
+def _dense_decode_body(carry, inp, *, cfg, pos):
+    h = carry
+    lp, ck, cv = inp
+    a, newc = attn.decode_attention(
+        lp["attn"], TF._norm(cfg, lp["ln1"], h), cfg, {"k": ck, "v": cv},
+        pos)
+    h = h + a
+    y = mlp.apply(lp["mlp"], TF._norm(cfg, lp["ln2"], h), cfg)
+    return h + y, (newc["k"], newc["v"])
+
+
+_SSM_KEYS = ("conv_x", "conv_b", "conv_c", "ssm")
+
+
+def _decode_ssm_stack(p, x, st, cfg, unroll):
+    def body(carry, inp):
+        h = carry
+        lp = inp[0]
+        layer_st = dict(zip(_SSM_KEYS, inp[1:]))
+        y, ns = mamba2.decode_step(
+            lp["mixer"], TF._norm(cfg, lp["ln"], h), cfg, layer_st)
+        return h + y, tuple(ns[k] for k in _SSM_KEYS)
+
+    x, outs = maybe_scan(
+        body, x, (p["layers"], *[st[k] for k in _SSM_KEYS]), unroll=unroll)
+    return x, dict(zip(_SSM_KEYS, outs))
+
+
+def _decode_hybrid_stack(p, x, st, kv, pos, cfg, unroll):
+    period = cfg.attn_every
+    shared = p["shared_attn"]
+
+    def attn_blk(h, ck, cv):
+        a, newc = attn.decode_attention(
+            shared["attn"], TF._norm(cfg, shared["ln1"], h), cfg,
+            {"k": ck, "v": cv}, pos)
+        h = h + a
+        y = mlp.apply(shared["mlp"], TF._norm(cfg, shared["ln2"], h), cfg)
+        return h + y, newc
+
+    if unroll:
+        kvk, kvv = kv["k"], kv["v"]
+        new_st = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], p["layers"])
+            layer_st = {k: st[k][i] for k in _SSM_KEYS}
+            y, ns = mamba2.decode_step(
+                lp["mixer"], TF._norm(cfg, lp["ln"], x), cfg, layer_st)
+            x = x + y
+            new_st.append(tuple(ns[k] for k in _SSM_KEYS))
+            if (i + 1) % period == 0:
+                j = (i + 1) // period - 1
+                x, newc = attn_blk(x, kvk[j], kvv[j])
+                kvk = kvk.at[j].set(newc["k"])
+                kvv = kvv.at[j].set(newc["v"])
+        outs = jax.tree.map(lambda *a: jnp.stack(a), *new_st)
+        return x, dict(zip(_SSM_KEYS, outs)), {"k": kvk, "v": kvv}
+
+    def body(carry, inp):
+        h, kvk, kvv = carry
+        i, lp = inp[0], inp[1]
+        layer_st = dict(zip(_SSM_KEYS, inp[2:]))
+        y, ns = mamba2.decode_step(
+            lp["mixer"], TF._norm(cfg, lp["ln"], h), cfg, layer_st)
+        h = h + y
+        j = (i + 1) // period - 1
+
+        def do_attn(args):
+            h, kvk, kvv = args
+            ck = jax.lax.dynamic_index_in_dim(kvk, j, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(kvv, j, keepdims=False)
+            h, newc = attn_blk(h, ck, cv)
+            kvk = jax.lax.dynamic_update_index_in_dim(
+                kvk, newc["k"], j, axis=0)
+            kvv = jax.lax.dynamic_update_index_in_dim(
+                kvv, newc["v"], j, axis=0)
+            return h, kvk, kvv
+
+        h, kvk, kvv = jax.lax.cond(
+            (i + 1) % period == 0, do_attn, lambda a: a, (h, kvk, kvv))
+        return (h, kvk, kvv), tuple(ns[k] for k in _SSM_KEYS)
+
+    idx = jnp.arange(cfg.n_layers)
+    (x, kvk, kvv), outs = maybe_scan(
+        body, (x, kv["k"], kv["v"]),
+        (idx, p["layers"], *[st[k] for k in _SSM_KEYS]), unroll=False)
+    return x, dict(zip(_SSM_KEYS, outs)), {"k": kvk, "v": kvv}
+
+
+def _decode_encdec_stack(p, x, kv, cross, pos, cfg, unroll):
+    def body(carry, inp):
+        h = carry
+        lp, ck, cv, xk, xv = inp
+        a, newc = attn.decode_attention(
+            lp["attn"], TF._norm(cfg, lp["ln1"], h), cfg,
+            {"k": ck, "v": cv}, pos, rope=True)
+        h = h + a
+        a, _ = attn.decode_attention(
+            lp["xattn"], TF._norm(cfg, lp["lnx"], h), cfg,
+            {"k": xk, "v": xv}, pos, rope=False, cross=True)
+        h = h + a
+        y = mlp.apply(lp["mlp"], TF._norm(cfg, lp["ln2"], h), cfg)
+        return h + y, (newc["k"], newc["v"])
+
+    x, (k, v) = maybe_scan(
+        body, x, (p["layers"], kv["k"], kv["v"], cross["k"], cross["v"]),
+        unroll=unroll)
+    return x, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Prefill with cache collection (serving runtime)
+# ---------------------------------------------------------------------------
+
+
+def prefill_with_cache(p, batch, cfg: ArchConfig, max_len: int, *,
+                       unroll=False):
+    """Run the full prompt, return (last logits, populated caches).
+
+    Implemented for the attention families (the serving runtime's prefill);
+    SSM/hybrid prefill uses the chunked SSD path with state return.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None]
+    x = TF._embed(p, tokens, cfg)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            h = carry
+            causal_cfg = cfg
+            a, (k, v) = attn.attention(
+                lp["attn"], TF._norm(cfg, lp["ln1"], h), causal_cfg,
+                positions=positions, unroll=unroll)
+            h = h + a
+            if cfg.family == "moe" and "moe" in lp:
+                y, _ = moe.apply(lp["moe"], TF._norm(cfg, lp["ln2"], h), cfg)
+            else:
+                y = mlp.apply(lp["mlp"], TF._norm(cfg, lp["ln2"], h), cfg)
+            pad = max_len - s
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h + y, (kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+
+        layers = p["layers"]
+        if cfg.family == "moe" and cfg.first_dense:
+            dense_cfg = cfg.replace(d_ff=cfg.d_ff or 4 * cfg.d_model)
+            x, kvd = maybe_scan(
+                functools.partial(
+                    _prefill_dense_body, cfg=dense_cfg,
+                    positions=positions, max_len=max_len, unroll=unroll),
+                x, p["dense_layers"], unroll=unroll)
+            x, kvm = maybe_scan(body, x, layers, unroll=unroll)
+            k = jnp.concatenate([kvd[0], kvm[0]])
+            v = jnp.concatenate([kvd[1], kvm[1]])
+        else:
+            x, (k, v) = maybe_scan(body, x, layers, unroll=unroll)
+        caches = {"kv": {"k": k, "v": v}}
+    elif cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "SSM prefill uses transformer.forward_logits + state return; "
+            "see serving runtime")
+    else:
+        raise ValueError(cfg.family)
+
+    x = TF._norm(cfg, p["ln_f"], x[:, -1:])
+    logits = x @ TF.head_weight(p, cfg)
+    return shard(logits, BATCH, None, MODEL), caches
+
+
+def _prefill_dense_body(carry, lp, *, cfg, positions, max_len, unroll):
+    h = carry
+    s = h.shape[1]
+    a, (k, v) = attn.attention(
+        lp["attn"], TF._norm(cfg, lp["ln1"], h), cfg,
+        positions=positions, unroll=unroll)
+    h = h + a
+    y = mlp.apply(lp["mlp"], TF._norm(cfg, lp["ln2"], h), cfg)
+    pad = max_len - s
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return h + y, (kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))

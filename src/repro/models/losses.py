@@ -1,0 +1,57 @@
+"""Sequence-chunked, vocab-sharded cross-entropy.
+
+The (tokens, vocab) logits tensor at production scale (1M tokens x 152k
+vocab for qwen2.5 train_4k) must never be materialized whole: the head
+matmul + softmax-xent are computed inside a `maybe_scan` over sequence
+chunks, with the vocab dimension sharded over `model`.  XLA partitions the
+logsumexp / label-pick reductions into per-shard partials + all-reduces.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import BATCH, MODEL, maybe_scan, shard
+
+
+def chunked_xent(x, head_w, labels, *, chunk: int, unroll: bool = False,
+                 mask=None):
+    """x (B, S, D) final hidden; head_w (D, V); labels (B, S) int32.
+
+    Returns (mean loss, total weight).  ``mask`` (B, S) optionally excludes
+    positions (e.g. image tokens, padding) from the loss.
+    """
+    b, s, d = x.shape
+    v = head_w.shape[1]
+    c = min(chunk, s)
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    pad = (-s) % c
+    if pad:                       # ragged tail (e.g. vlm text length)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s += pad
+    nc = s // c
+
+    xc = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xb, lb, mb = inp
+        logits = xb @ head_w                         # (B, C, V)
+        logits = shard(logits, BATCH, None, MODEL).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lb, v, dtype=logits.dtype)
+        onehot = shard(onehot, BATCH, None, MODEL)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        tot = tot + jnp.sum((lse - ll) * mb)
+        cnt = cnt + jnp.sum(mb)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = maybe_scan(body, (jnp.float32(0), jnp.float32(0)),
+                               (xc, lc, mc), unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0), cnt

@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD train/prefill path (quadratic intra-chunk attention-like term +
+linear inter-chunk state recurrence) and the constant-memory decode step
+(the SSM analogue of a KV cache is a (B, H, P, N) state + a small causal
+conv buffer — this is what makes long_500k decode tractable).
+
+Shapes: u (B, L, D); inner width di = expand*D; heads H = di/P (P=headdim);
+groups G (B/C shared across H/G heads); state N = d_state.
+
+TP sharding: the fused mamba2 in_proj is stored as *separate* component
+projections (wz, wx, wb, wc, wdt) so each output lands on a clean shard
+boundary — a fused (z|x|B|C|dt) projection sharded over `model` would slice
+across shards at the split points and force XLA reshards.  x/z are
+head-sharded over `model`; B/C/dt are small and replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.common import BATCH, MODEL, maybe_scan, shard
+
+
+def init(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    di, h, n, g = cfg.d_inner, cfg.ssm_heads, cfg.d_state, cfg.n_groups
+    gn = g * n
+    ks = jax.random.split(key, 9)
+    p = {
+        "wz": C.linear_init(ks[0], d, di, quant=cfg.quant),
+        "wx": C.linear_init(ks[1], d, di, quant=cfg.quant),
+        "wb": C.linear_init(ks[2], d, gn),
+        "wc": C.linear_init(ks[3], d, gn),
+        "wdt": C.linear_init(ks[4], d, h),
+        "conv_x": {"w": C.dense_init(ks[5], (cfg.conv_width, di),
+                                     scale=cfg.conv_width ** -0.5),
+                   "b": jnp.zeros((di,), jnp.bfloat16)},
+        "conv_b": {"w": C.dense_init(ks[6], (cfg.conv_width, gn),
+                                     scale=cfg.conv_width ** -0.5),
+                   "b": jnp.zeros((gn,), jnp.bfloat16)},
+        "conv_c": {"w": C.dense_init(ks[7], (cfg.conv_width, gn),
+                                     scale=cfg.conv_width ** -0.5),
+                   "b": jnp.zeros((gn,), jnp.bfloat16)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": C.rmsnorm_init(di),
+        "out_proj": C.linear_init(ks[8], di, d, quant=cfg.quant),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, x (B, L, Ch), w (W, Ch)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(y + b)
+
+
+def _segsum_decay(da_c):
+    """da_c (B, NC, Q, H) -> L (B, NC, H, Q, Q): exp(sum_{j<k<=i} da_k), i>=j."""
+    q = da_c.shape[2]
+    cs = jnp.cumsum(da_c, axis=2)                       # (B,NC,Q,H)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,NC,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    return jnp.exp(diff).transpose(0, 1, 4, 2, 3)       # (B,NC,H,Qi,Qj)
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, *, chunk: int,
+                initial_state=None, unroll: bool = False):
+    """SSD scan.  x (B,L,H,P) raw inputs (dt-scaling applied inside).
+
+    Args: dt (B,L,H) positive; a_log (H,) with A = -exp(a_log);
+    bmat/cmat (B,L,G,N).  Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    b, l, h, pdim = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g                                         # heads per group
+    q = min(chunk, l)
+    nc = l // q
+    assert l % q == 0, (l, q)
+
+    a = -jnp.exp(a_log)                                 # (H,) negative
+    da = dt * a                                         # (B,L,H)
+    xdt = (x.astype(jnp.float32) * dt[..., None])
+
+    da_c = da.reshape(b, nc, q, h)
+    x_c = xdt.reshape(b, nc, q, g, hg, pdim)
+    b_c = bmat.reshape(b, nc, q, g, n).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, q, g, n).astype(jnp.float32)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    lmat = _segsum_decay(da_c).reshape(b, nc, g, hg, q, q)
+    cb = jnp.einsum("bnigN,bnjgN->bngij", c_c, b_c)
+    y_diag = jnp.einsum("bngij,bngrij,bnjgrp->bnigrp", cb, lmat, x_c)
+
+    # --- per-chunk state contributions ---
+    cs = jnp.cumsum(da_c, axis=2)                       # (B,NC,Q,H)
+    decay_last = jnp.exp(cs[:, :, -1:, :] - cs)         # (B,NC,Q,H)
+    dl = decay_last.reshape(b, nc, q, g, hg)
+    states = jnp.einsum("bnjgN,bnjgr,bnjgrp->bngrpN", b_c, dl, x_c)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cs[:, :, -1, :]).reshape(b, nc, g, hg)
+
+    def rec(s, inp):
+        st, dec = inp
+        s_out = s
+        s = s * dec[..., None, None] + st
+        return s, s_out
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, g, hg, pdim, n), jnp.float32)
+    else:
+        s0 = initial_state.reshape(b, g, hg, pdim, n).astype(jnp.float32)
+    final, prev_states = maybe_scan(
+        rec, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=unroll)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,NC,G,Hg,P,N)
+
+    # --- inter-chunk output ---
+    in_decay = jnp.exp(cs).reshape(b, nc, q, g, hg)
+    y_off = jnp.einsum("bnigN,bngrpN,bnigr->bnigrp", c_c, prev_states,
+                       in_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, pdim)
+    return y, final.reshape(b, h, pdim, n)
+
+
+def apply(p, u, cfg, *, unroll=False, initial_state=None,
+          return_state=False):
+    """Full-sequence SSD block.  u (B, L, D) -> (B, L, D)."""
+    b, l, d = u.shape
+    di, h, pdim = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.n_groups, cfg.d_state
+
+    z = C.linear(p["wz"], u, quant=cfg.quant)
+    xr = C.linear(p["wx"], u, quant=cfg.quant)
+    br = C.linear(p["wb"], u)
+    cr = C.linear(p["wc"], u)
+    dt_raw = C.linear(p["wdt"], u)
+
+    xr = _causal_conv(xr, p["conv_x"]["w"], p["conv_x"]["b"])
+    br = _causal_conv(br, p["conv_b"]["w"], p["conv_b"]["b"])
+    cr = _causal_conv(cr, p["conv_c"]["w"], p["conv_c"]["b"])
+
+    x = shard(xr.reshape(b, l, h, pdim), BATCH, None, MODEL, None)
+    bmat = br.reshape(b, l, g, n)
+    cmat = cr.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    y, state = ssd_chunked(x, dt, p["A_log"], bmat, cmat, chunk=cfg.chunk,
+                           initial_state=initial_state, unroll=unroll)
+    y = y + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, l, di).astype(u.dtype)
+    y = C.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    y = shard(y, BATCH, None, MODEL)
+    out = C.linear(p["out_proj"], y, quant=cfg.quant)
+    out = shard(out, BATCH, None, None)
+    if return_state:
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-step recurrence; constant memory in sequence length)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg, batch: int):
+    di, h = cfg.d_inner, cfg.ssm_heads
+    gn = cfg.n_groups * cfg.d_state
+    w = cfg.conv_width - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, di), jnp.bfloat16),
+        "conv_b": jnp.zeros((batch, w, gn), jnp.bfloat16),
+        "conv_c": jnp.zeros((batch, w, gn), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_headdim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def _conv_step(buf, xnew, w, b):
+    """buf (B, W-1, Ch), xnew (B, Ch) -> (out (B, Ch), new buf)."""
+    seq = jnp.concatenate([buf, xnew[:, None, :].astype(buf.dtype)], axis=1)
+    y = jnp.einsum("bwc,wc->bc", seq, w) + b
+    return jax.nn.silu(y), seq[:, 1:, :]
+
+
+def decode_step(p, u, cfg, state):
+    """u (B, 1, D) -> (y (B, 1, D), new_state)."""
+    b = u.shape[0]
+    di, h, pdim = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.n_groups, cfg.d_state
+
+    z = C.linear(p["wz"], u, quant=cfg.quant)[:, 0]
+    xr = C.linear(p["wx"], u, quant=cfg.quant)[:, 0]
+    br = C.linear(p["wb"], u)[:, 0]
+    cr = C.linear(p["wc"], u)[:, 0]
+    dt_raw = C.linear(p["wdt"], u)[:, 0]
+
+    xr, conv_x = _conv_step(state["conv_x"], xr,
+                            p["conv_x"]["w"], p["conv_x"]["b"])
+    br, conv_b = _conv_step(state["conv_b"], br,
+                            p["conv_b"]["w"], p["conv_b"]["b"])
+    cr, conv_c = _conv_step(state["conv_c"], cr,
+                            p["conv_c"]["w"], p["conv_c"]["b"])
+
+    x = xr.reshape(b, h, pdim)
+    bmat = br.reshape(b, g, n).astype(jnp.float32)
+    cmat = cr.reshape(b, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    hg = h // g
+    dec = jnp.exp(dt * a)                                # (B, H)
+    xf = x.astype(jnp.float32) * dt[..., None]
+    upd = jnp.einsum("bgN,bghp->bghpN", bmat, xf.reshape(b, g, hg, pdim))
+    s = state["ssm"].reshape(b, g, hg, pdim, n)
+    s = s * dec.reshape(b, g, hg)[..., None, None] + upd
+    y = jnp.einsum("bgN,bghpN->bghp", cmat, s)
+    y = y.reshape(b, h, pdim) + x.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = C.rmsnorm(p["norm"], y * jax.nn.silu(z[:, None, :]))
+    out = C.linear(p["out_proj"], y, quant=cfg.quant)
+    return out, {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
+                 "ssm": s.reshape(b, h, pdim, n)}

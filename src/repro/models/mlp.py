@@ -1,0 +1,35 @@
+"""Dense FFN (SwiGLU / GELU) with Megatron column/row TP sharding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.common import BATCH, MODEL, shard
+
+
+def init(key, cfg, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": C.linear_init(ks[0], d, f, quant=cfg.quant),
+        "down": C.linear_init(ks[1], f, d, quant=cfg.quant),
+    }
+    if cfg.act == "silu":                      # swiglu needs the gate proj
+        p["gate"] = C.linear_init(ks[2], d, f, quant=cfg.quant)
+    return p
+
+
+def apply(p, x, cfg):
+    up = C.linear(p["up"], x, quant=cfg.quant)
+    up = shard(up, BATCH, None, MODEL)
+    if cfg.act == "silu":
+        gate = C.linear(p["gate"], x, quant=cfg.quant)
+        gate = shard(gate, BATCH, None, MODEL)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = C.linear(p["down"], h, quant=cfg.quant)
+    return shard(y, BATCH, None, None)

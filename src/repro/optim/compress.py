@@ -1,0 +1,75 @@
+"""Ternary gradient compression (TernGrad-flavored) with error feedback.
+
+The paper's trit codec applied at the distributed-systems layer: before the
+data-parallel all-reduce, each gradient tensor is ternarized to
+``scale * {-1,0,+1}`` — wire traffic drops from 16 b/element (bf16) to
+1.6 b/element once packed (10x), and the all-reduce of trits + per-tensor
+scales is exact under the ring reduce (sum of scaled trits).
+
+Error feedback (residual accumulation) keeps convergence: the quantization
+error of step t is added back into the gradient of step t+1, so the
+compression bias telescopes instead of accumulating.
+
+`compress_tree` is stateless (pure ternarize, used inside the jitted step
+for wire-traffic reduction); `ErrorFeedback` carries the residual state for
+optimizer-grade convergence (used by the quickstart convergence test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary as T
+
+
+def compress_leaf(g, residual=None):
+    """g -> (g_ternary, new_residual, stats)."""
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    delta = T.twn_delta(gf)                     # per-tensor threshold
+    q = T.ternarize(gf, delta)
+    scale = T.twn_scale(gf, q)
+    gq = (scale * q).astype(g.dtype)
+    res = gf - gq.astype(jnp.float32)
+    return gq, res, jnp.mean((q == 0).astype(jnp.float32))
+
+
+def compress_tree(grads):
+    """Stateless ternarization of every leaf (wire-format compression)."""
+    sp = []
+
+    def leaf(g):
+        gq, _, s = compress_leaf(g)
+        sp.append(s)
+        return gq
+
+    out = jax.tree.map(leaf, grads)
+    stats = {"grad_sparsity": jnp.mean(jnp.stack(sp))} if sp else {}
+    return out, stats
+
+
+class ErrorFeedback:
+    """Residual-carrying compressor: ef = ErrorFeedback(grads_template)."""
+
+    def __init__(self, template):
+        self.residual = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), template)
+
+    def __call__(self, grads):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(self.residual)
+        out_g, out_r = [], []
+        for g, r in zip(flat_g, flat_r):
+            gq, res, _ = compress_leaf(g, r)
+            out_g.append(gq)
+            out_r.append(res)
+        self.residual = treedef.unflatten(out_r)
+        return treedef.unflatten(out_g)
+
+
+def wire_bytes(grads, packed: bool = True) -> int:
+    """DP all-reduce payload: packed trits (1.6 b) vs bf16 (16 b)."""
+    n = sum(g.size for g in jax.tree.leaves(grads))
+    return int(n * (1.6 if packed else 16) / 8)

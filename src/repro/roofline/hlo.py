@@ -1,0 +1,133 @@
+"""HLO cost & collective-bytes extraction for the roofline analysis.
+
+XLA's `compiled.cost_analysis()` provides per-device FLOPs and bytes, but
+(a) it counts a while-loop body exactly once regardless of trip count
+(measured — see DESIGN.md §8), and (b) it reports nothing about
+collectives.  This module provides:
+
+  * `collective_bytes(hlo_text)` — wire-byte accounting per collective op,
+    parsed from the compiled (post-SPMD) HLO.  Per-device wire bytes use
+    ring-algorithm factors with the group size g parsed from
+    replica_groups:
+        all-gather         (g-1)/g * result
+        reduce-scatter     (g-1)   * result       (input = g * result)
+        all-reduce         2(g-1)/g * result
+        all-to-all         (g-1)/g * result
+        collective-permute 1       * operand(=result)
+  * `extract(compiled)` — flops / bytes / collective summary for one
+    compiled executable.
+
+The scan-undercount is handled upstream (launch/dryrun.py) by compiling
+depth-reduced *unrolled* modules at two depths and extrapolating linearly
+in the layer count — exact for homogeneous stacks.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^{]*?\}|\[\d+,\d+\])")
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every shape in a (possibly tuple) HLO type."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("[") :
+        # iota format [num_groups, group_size]
+        nums = [int(x) for x in g.strip("[]").split(",")]
+        return nums[1] if len(nums) == 2 else default
+    first = g[2:g.index("}")]
+    return len(first.split(","))
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> dict:
+    """Returns {'total_wire_bytes', 'by_op': {op: {count, wire_bytes}},
+    'top': [(op, shape_bytes, count), ...]}  — per-device accounting."""
+    by_op = defaultdict(lambda: {"count": 0, "wire_bytes": 0.0,
+                                 "payload_bytes": 0.0})
+    sig_count: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":        # async pair: count the -start only
+            continue
+        type_str, op = m.group(1), m.group(2)
+        payload = shape_bytes(type_str)
+        g = _group_size(line, default_group)
+        wire = payload * _WIRE_FACTOR[op](max(g, 1))
+        d = by_op[op]
+        d["count"] += 1
+        d["wire_bytes"] += wire
+        d["payload_bytes"] += payload
+        sig_count[(op, payload, g)] += 1
+    top = sorted(((op, pb, g, c) for (op, pb, g), c in sig_count.items()),
+                 key=lambda t: -t[1] * t[3])[:12]
+    return {
+        "total_wire_bytes": sum(d["wire_bytes"] for d in by_op.values()),
+        "by_op": {k: dict(v) for k, v in by_op.items()},
+        "top": [{"op": op, "payload_bytes": pb, "group": g, "count": c}
+                for op, pb, g, c in top],
+    }
+
+
+def extract(compiled, *, with_collectives: bool = True) -> dict:
+    ca = compiled.cost_analysis()
+    out = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+    if with_collectives:
+        out["collectives"] = collective_bytes(compiled.as_text())
+    return out
+
+
+def memory(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_gb": ma.argument_size_in_bytes / 1e9,
+        "output_gb": ma.output_size_in_bytes / 1e9,
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "alias_gb": ma.alias_size_in_bytes / 1e9,
+        "peak_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                    + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes) / 1e9,
+    }

@@ -1,0 +1,49 @@
+"""Parameter counting for MODEL_FLOPS accounting (6*N*D / 6*N_active*D)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.config import ArchConfig
+
+
+def _leaf_sizes(abstract_params):
+    out = []
+
+    def rec(path, x):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = int(x.size) if hasattr(x, "size") else 0
+        if name.endswith("w_packed"):
+            n *= 5                  # packed trits: 5 weights per byte
+        out.append((name, n))
+        return x
+
+    jax.tree_util.tree_map_with_path(rec, abstract_params)
+    return out
+
+
+def count_params(cfg: ArchConfig) -> dict:
+    from repro.launch import steps
+    sizes = _leaf_sizes(steps.abstract_params(cfg))
+    total = sum(s for _, s in sizes)
+    embed = sum(s for p, s in sizes
+                if p.endswith("embed") or "enc_pos" in p or "dec_pos" in p)
+    expert = sum(s for p, s in sizes
+                 if any(t in p for t in ("gate_proj", "up_proj",
+                                         "down_proj")))
+    matmul = total - embed
+    if cfg.tie_embeddings:
+        # tied head still does a (D, V) matmul per token
+        matmul += cfg.d_model * (-(-cfg.vocab // 256) * 256)
+    if cfg.n_experts:
+        active_expert = expert * cfg.topk / cfg.n_experts
+        active = matmul - expert + active_expert
+    else:
+        active = matmul
+    return {
+        "total": total,
+        "embed": embed,
+        "matmul": matmul,
+        "expert": expert,
+        "active_matmul": int(active),
+    }

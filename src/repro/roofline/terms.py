@@ -1,0 +1,64 @@
+"""Roofline terms for TPU v5e (target hardware; constants per assignment).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / (links * link_bw)
+
+All three are seconds-per-step lower bounds; the max is the roofline step
+time and its argmax is the bottleneck.  MODEL_FLOPS (6*N*D dense /
+6*N_active*D MoE) over HLO FLOPs measures how much compiled compute is
+"useful" (catches remat recompute, masked-attention waste, MoE capacity
+overhead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS = 1                # conservative: single-link serialization
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of roofline: how close the step is to pure compute."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def roofline(flops: float, bytes_: float, wire_bytes: float) -> Roofline:
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=wire_bytes / (ICI_LINKS * ICI_LINK_BW),
+    )
+
+
+def model_flops_train(n_params: int, n_tokens: int,
+                      active_params: int | None = None) -> float:
+    """6*N*D (fwd+bwd) with N = active params for MoE."""
+    n = active_params if active_params is not None else n_params
+    return 6.0 * n * n_tokens
+
+
+def model_flops_infer(n_params: int, n_tokens: int,
+                      active_params: int | None = None) -> float:
+    n = active_params if active_params is not None else n_params
+    return 2.0 * n * n_tokens

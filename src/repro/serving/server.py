@@ -1,0 +1,136 @@
+"""Slot-based continuous-batching serving runtime.
+
+The CUTIE ASIC serves autonomously from a layer FIFO with the host asleep
+(paper Fig. 3); the framework analogue is a serving loop whose inner decode
+is ONE jitted step for the whole slot batch — no host round-trip per token
+per request.
+
+Mechanics:
+  * ``n_slots`` concurrent sequences share a batched KV cache
+    (L, n_slots, max_len, Hk, Dh);
+  * arriving requests are prefill'd (single jitted prefill) and their cache
+    rows inserted into free slots;
+  * every `step()` advances all active slots by one token (greedy or
+    temperature sampling);
+  * finished slots (EOS or length cap) free immediately and are refilled
+    from the queue — continuous batching.
+
+Works for the attention families; SSM/hybrid serving uses the same loop
+with state slots instead of KV rows (constant memory in sequence length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoding as DEC
+from repro.models import transformer as TF
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    max_len: int = 256
+    n_slots: int = 4
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1: run to max_new_tokens
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, params, cfg: ArchConfig, scfg: ServerConfig):
+        assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.caches = DEC.init_caches(cfg, scfg.n_slots, scfg.max_len)
+        self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
+        self.cur_tok = jnp.zeros((scfg.n_slots, 1), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * scfg.n_slots
+        self.queue: deque[Request] = deque()
+        self.finished: dict[int, Request] = {}
+        self._uid = 0
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+        self._decode = jax.jit(
+            lambda p, t, c, pos: DEC.decode_step(p, t, c, pos, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: DEC.prefill_with_cache(p, b, cfg, scfg.max_len))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32)))
+        return self._uid
+
+    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        """Drive until every submitted request completes."""
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return {uid: r.out_tokens for uid, r in sorted(self.finished.items())}
+
+    # -- engine -------------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit + decode one token for all active slots.  False when idle."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        logits, self.caches = self._decode(
+            self.params, self.cur_tok, self.caches, self.pos)
+        nxt = self._sample(logits)          # (n_slots,)
+        self.pos = self.pos + 1
+        self.cur_tok = nxt[:, None]
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            if tok == self.scfg.eos_id or \
+                    len(req.out_tokens) >= self.scfg.max_new_tokens or \
+                    int(self.pos[i]) >= self.scfg.max_len - 1:
+                req.done = True
+                self.finished[req.uid] = req
+                self.active[i] = None
+        return True
+
+    def _admit(self):
+        for slot in range(self.scfg.n_slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            logits, caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None])})
+            plen = len(req.prompt)
+            # insert this request's cache rows into the batched cache
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.caches, caches)
+            first = self._sample(logits)[0]
+            req.out_tokens.append(int(first))
+            self.pos = self.pos.at[slot].set(plen)
+            self.cur_tok = self.cur_tok.at[slot, 0].set(first)
+            self.active[slot] = req
+
+    def _sample(self, logits) -> jax.Array:
+        lg = logits[:, -1, : self.cfg.vocab]
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, lg / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.train.loop import TrainLoopConfig, train  # noqa: F401

@@ -1,0 +1,146 @@
+"""QAT training of the paper's CNN on synthcifar (Table IV experiments).
+
+One function = one Table IV row: train the CUTIE CNN with a given
+(weight mode x quantization strategy), INQ schedule per paper Fig. 8,
+evaluate accuracy + weight sparsity, and compile the bit-true program for
+the energy model.
+
+The container trains a width-reduced net on the synthetic dataset
+(DESIGN.md §8): ordered claims are validated, not absolute CIFAR numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cutie_cnn import CutieCNNConfig
+from repro.core import inq
+from repro.data import cifar
+from repro.models import cutie_cnn
+from repro.optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class QATRunConfig:
+    width: int = 32
+    steps: int = 240
+    batch: int = 64
+    lr: float = 2e-3
+    mode: str = "ternary"                 # ternary | binary
+    strategy: str = "magnitude-inverse"   # inq strategy
+    thermometer: str = "ternary"          # ternary | binary (input encoding)
+    eval_n: int = 512
+    seed: int = 0
+    freeze_by: float = 0.75       # fraction of steps by which INQ completes
+    data: cifar.SynthCifarConfig = cifar.SynthCifarConfig()
+
+
+def _model_cfg(rc: QATRunConfig) -> CutieCNNConfig:
+    return CutieCNNConfig(width=rc.width, act_mode=rc.mode,
+                          weight_mode=rc.mode)
+
+
+def run(rc: QATRunConfig) -> dict:
+    cfg = _model_cfg(rc)
+    # with_scale=False: weights freeze to PURE trits {-1,0,+1}; the scale
+    # lives in BN (gamma), exactly like the hardware (which only ever sees
+    # trits + folded thresholds).  Per-phase scales would give different
+    # alphas to different weights of one output channel — representable in
+    # the float graph but NOT on the OCU, breaking bit-true parity.
+    icfg = inq.INQConfig(strategy=rc.strategy, mode=rc.mode,
+                         with_scale=False)
+    params = cutie_cnn.init_params(cfg, jax.random.PRNGKey(rc.seed))
+    inq_state = {"layers": inq.init_state(params["layers"]),
+                 "fc": None}
+    opt = adam.init_state(params)
+    # weight decay is load-bearing for the INQ sparsity dynamics: unfrozen
+    # weights decay toward 0 between phases, so orders that freeze large
+    # weights LAST (magnitude-inverse) accumulate far more zeros —
+    # the paper's Table IV mechanism.
+    acfg = adam.AdamConfig(lr=rc.lr, total_steps=rc.steps,
+                           warmup_steps=max(1, rc.steps // 20),
+                           weight_decay=0.02, grad_clip=5.0)
+    ternary_in = rc.thermometer == "ternary"
+
+    @jax.jit
+    def step_fn(params, opt, inq_layers, batch):
+        st = {"layers": inq_layers}
+
+        def loss(p):
+            return cutie_cnn.loss_fn(p, batch, cfg, train=True,
+                                     inq_state=st)
+        (l, aux), g = jax.value_and_grad(loss, has_aux=True)(params)
+        g = dict(g, layers=inq.mask_grads(inq_layers, g["layers"]))
+        params, opt, om = adam.apply_update(params, g, opt, acfg)
+        params = cutie_cnn.apply_bn_updates(params, aux["bn"])
+        return params, opt, {"loss": l, "acc": aux["acc"], **om}
+
+    frac = 0.0
+    history = []
+    freeze_steps = max(1, int(rc.steps * rc.freeze_by))
+    for step in range(rc.steps):
+        want = inq.phase_for_step(min(step, freeze_steps), freeze_steps,
+                                  icfg)
+        if want > frac:
+            inq_state["layers"] = inq.freeze(
+                inq_state["layers"], params["layers"], want, icfg)
+            frac = want
+        batch = cifar.encoded_batch(
+            rc.data, "train", step * rc.batch, rc.batch,
+            m=cfg.thermometer_m, ternary=ternary_in)
+        batch = {"x": jnp.asarray(batch["x"]),
+                 "y": jnp.asarray(batch["y"])}
+        params, opt, m = step_fn(params, opt, inq_state["layers"], batch)
+        if step % 20 == 0 or step == rc.steps - 1:
+            history.append({"step": step, "loss": float(m["loss"]),
+                            "acc": float(m["acc"]), "inq_frac": frac})
+
+    # final freeze to 100% (ensures pure trits for compilation)
+    inq_state["layers"] = inq.freeze(
+        inq_state["layers"], params["layers"], 1.0, icfg)
+
+    acc = evaluate(params, inq_state, cfg, rc)
+    sparsity = inq.weight_sparsity(inq_state["layers"], params["layers"])
+
+    return {"params": params, "inq_state": inq_state, "cfg": cfg,
+            "accuracy": acc, "weight_sparsity": sparsity,
+            "history": history, "run_config": rc}
+
+
+def evaluate(params, inq_state, cfg, rc: QATRunConfig,
+             batch: int = 128) -> float:
+    ternary_in = rc.thermometer == "ternary"
+    correct = tot = 0
+
+    @jax.jit
+    def fwd(params, x):
+        logits, _ = cutie_cnn.forward(
+            params, x, cfg, train=False,
+            inq_state={"layers": inq_state["layers"]})
+        return jnp.argmax(logits, -1)
+
+    for start in range(0, rc.eval_n, batch):
+        n = min(batch, rc.eval_n - start)
+        b = cifar.encoded_batch(rc.data, "test", start, n,
+                                m=cfg.thermometer_m, ternary=ternary_in)
+        pred = fwd(params, jnp.asarray(b["x"]))
+        correct += int(jnp.sum(pred == jnp.asarray(b["y"])))
+        tot += n
+    return correct / tot
+
+
+def to_program(result: dict, instance=None):
+    from repro.core import engine
+    instance = instance or engine.GF22_SCM
+    cfg, rc = result["cfg"], result["run_config"]
+    # width-reduced nets still compile; the instance check needs n_i >= width
+    inst = dataclasses.replace(
+        instance, n_i=max(instance.n_i, cfg.in_channels),
+        n_o=max(instance.n_o, cfg.width))
+    return cutie_cnn.to_program(
+        result["params"], cfg, inst, inq_state=result["inq_state"])

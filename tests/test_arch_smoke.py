@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, asserting output shapes + no NaNs (assignment spec)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import decoding as DEC
+from repro.models import transformer as TF
+from repro.models.config import reduce_for_smoke
+from repro.optim import adam
+
+ARCHS = configs.ARCH_IDS
+
+
+def _batch(cfg, b=2, s=32, train=True):
+    rng = np.random.default_rng(0)
+    out = {}
+    if cfg.family == "vlm":
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s - cfg.img_tokens)), jnp.int32)
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.img_tokens, cfg.d_vision)), jnp.bfloat16)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+    if train:
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, out["tokens"].shape), jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduce_for_smoke(configs.get(arch))
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    acfg = adam.AdamConfig(total_steps=10, warmup_steps=1)
+    opt = adam.init_state(params)
+
+    @jax.jit
+    def step(p, o, b):
+        def loss(p):
+            return TF.forward_loss(p, b, cfg)
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(p)
+        p, o, om = adam.apply_update(p, g, o, acfg)
+        return p, o, {**m, "loss": l, **om}
+
+    p2, o2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"])), (arch, m)
+    assert float(m["grad_norm"]) > 0
+    # params actually moved
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_logits_smoke(arch):
+    cfg = reduce_for_smoke(configs.get(arch))
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, train=False)
+    logits = jax.jit(lambda p, b: TF.forward_logits(p, b, cfg))(
+        params, batch)
+    vp = TF.vocab_padded(cfg)
+    assert logits.shape == (2, 1, vp)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = reduce_for_smoke(configs.get(arch))
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    b, max_len = 2, 64
+    caches = DEC.init_caches(cfg, b, max_len)
+    tok = jnp.ones((b, 1), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    logits, new_caches = jax.jit(
+        lambda p, t, c, q: DEC.decode_step(p, t, c, q, cfg))(
+        params, tok, caches, pos)
+    assert logits.shape[0] == b
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # cache structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "mamba2_780m",
+                                  "zamba2_2_7b"])
+def test_decode_matches_prefill(arch):
+    """Teacher-forced decode loop == full-sequence forward logits."""
+    cfg = reduce_for_smoke(configs.get(arch))
+    params = TF.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 1, 8
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full = TF.forward_logits(params, {"tokens": toks}, cfg)  # last position
+
+    caches = DEC.init_caches(cfg, b, 16)
+    step = jax.jit(lambda p, t, c, q: DEC.decode_step(p, t, c, q, cfg))
+    for i in range(s):
+        logits, caches = step(params, toks[:, i:i + 1], caches,
+                              jnp.full((b,), i, jnp.int32))
+    a = np.asarray(logits[:, -1], np.float32).ravel()
+    f = np.asarray(full[:, -1], np.float32).ravel()
+    # bf16 chunked-scan (prefill) vs step recurrence (decode) accumulate
+    # differently; require tight distributional agreement (argmax can flip
+    # between near-ties on random-init logits).
+    assert np.corrcoef(a, f)[0, 1] > 0.99
+    np.testing.assert_allclose(a, f, rtol=0.3, atol=0.3)
+    assert np.argmax(a) in np.argsort(f)[-5:]
+
+
+def test_ternary_quant_mode_trains():
+    """The paper's QAT mode on an LM config: loss finite, grads flow."""
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(
+        quant="ternary")
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    def loss(p):
+        return TF.forward_loss(p, batch, cfg)
+
+    (l, _), g = jax.value_and_grad(loss, has_aux=True)(params)
+    assert np.isfinite(float(l))
+    gn = float(adam.global_norm(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_ternary_packed_serving_close_to_dense_trits():
+    """ternary_packed linear == ternary STE linear at inference."""
+    from repro.models import common as C
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 8, 40), jnp.float32)
+    p_packed = C.linear_init(key, 40, 32, quant="ternary_packed")
+    # reference: decode packed trits manually
+    from repro.kernels import ref
+    w = ref.unpack_trits(p_packed["w_packed"].T).T[:40].astype(jnp.float32)
+    want = x @ (w * p_packed["scale"])
+    got = C.linear(p_packed, x, quant="ternary_packed")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5)

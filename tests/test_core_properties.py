@@ -1,0 +1,194 @@
+"""Property-based tests (hypothesis) for the core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import folding, inq, ternary, thermometer
+from repro.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+small_arrays = hnp.arrays(np.float32, hnp.array_shapes(
+    min_dims=1, max_dims=3, min_side=2, max_side=16), elements=floats)
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_arrays)
+def test_ternarize_range_and_threshold(w):
+    delta = float(ternary.twn_delta(jnp.asarray(w)))
+    q = np.asarray(ternary.ternarize(jnp.asarray(w), delta))
+    assert set(np.unique(q)) <= {-1.0, 0.0, 1.0}
+    assert np.all((q == 1) == (w > delta))
+    assert np.all((q == -1) == (w < -delta))
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_arrays)
+def test_twn_scale_is_least_squares_optimal(w):
+    """alpha = argmin ||w - a*q||^2 over the support of q."""
+    wj = jnp.asarray(w)
+    delta = ternary.twn_delta(wj)
+    q = ternary.ternarize(wj, delta)
+    if float(jnp.sum(q != 0)) == 0:
+        return
+    alpha = float(ternary.twn_scale(wj, q))
+    # perturbing alpha must not decrease the residual
+    def res(a):
+        return float(jnp.sum((wj - a * q) ** 2))
+    assert res(alpha) <= res(alpha * 1.01) + 1e-5
+    assert res(alpha) <= res(alpha * 0.99) + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 128))
+def test_ternary_thermometer_definition(m, x):
+    """g(x)_i = sgn(x-M) * (f(|x-M|)_i + 1)/2, range/zeros properties."""
+    x = min(x, 2 * m)
+    g = np.asarray(thermometer.ternary_thermometer(jnp.asarray([x]), m))[0]
+    s = np.sign(x - m)
+    f = np.where(np.arange(m) < abs(x - m), 1, -1)
+    expect = s * ((f + 1) // 2)
+    assert np.array_equal(g, expect)
+    assert np.sum(g != 0) == abs(x - m)      # |x-M| non-zeros
+    # encodes twice the range of the binary thermometer in the same M
+    assert g.shape == (m,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 8))
+def test_codec_roundtrip_property(groups, rows):
+    rng = np.random.default_rng(groups * 31 + rows)
+    t = rng.integers(-1, 2, size=(rows, 5 * groups)).astype(np.int8)
+    b = np.asarray(ref.pack_trits(jnp.asarray(t)))
+    assert b.max() <= 242            # 3^5 - 1
+    assert np.array_equal(np.asarray(ref.unpack_trits(jnp.asarray(b))), t)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_threshold_folding_exact(seed):
+    """Folded two-compare == float BN+hardtanh+ternarize, elementwise."""
+    rng = np.random.default_rng(seed)
+    c = 8
+    z = jnp.asarray(rng.integers(-300, 300, size=(16, c)), jnp.int32)
+    kw = dict(
+        alpha=jnp.asarray(rng.uniform(0.01, 2, c), jnp.float32),
+        bias=jnp.asarray(rng.normal(0, 1, c), jnp.float32),
+        gamma=jnp.asarray(rng.normal(0, 1, c), jnp.float32),  # may be < 0
+        beta=jnp.asarray(rng.normal(0, 0.5, c), jnp.float32),
+        mean=jnp.asarray(rng.normal(0, 1, c), jnp.float32),
+        var=jnp.asarray(rng.uniform(0.1, 2, c), jnp.float32),
+    )
+    th = folding.fold_thresholds(**kw)
+    got = np.asarray(folding.apply_thresholds(z, th))
+    want = np.asarray(folding.reference_float_activation(z, **kw))
+    assert np.array_equal(got, want)
+
+
+def test_folding_degenerate_gamma_zero():
+    c = 4
+    th = folding.fold_thresholds(
+        alpha=jnp.ones(c), bias=jnp.zeros(c), gamma=jnp.zeros(c),
+        beta=jnp.asarray([1.0, -1.0, 0.2, -0.2]), mean=jnp.zeros(c),
+        var=jnp.ones(c))
+    z = jnp.zeros((5, c), jnp.int32)
+    out = np.asarray(folding.apply_thresholds(z, th))
+    assert np.array_equal(out[0], [1, -1, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# INQ invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["magnitude", "magnitude-inverse", "zigzag"]))
+def test_inq_mask_monotone_and_exact_fraction(seed, strategy):
+    rng = np.random.default_rng(seed)
+    w = {"w": jnp.asarray(rng.normal(size=(12, 10)), jnp.float32)}
+    cfg = inq.INQConfig(strategy=strategy)
+    st_ = inq.init_state(w)
+    prev_mask = np.zeros((12, 10))
+    for frac in (0.2, 0.5, 0.9, 1.0):
+        st_ = inq.freeze(st_, w, frac, cfg)
+        mask = np.asarray(st_["w"]["mask"])
+        assert np.all(mask >= prev_mask), "mask must only grow"
+        assert int(mask.sum()) == round(frac * mask.size)
+        prev_mask = mask
+
+
+def test_inq_frozen_values_do_not_drift():
+    rng = np.random.default_rng(0)
+    w = {"w": jnp.asarray(rng.normal(size=(20, 5)), jnp.float32)}
+    cfg = inq.INQConfig(strategy="magnitude-inverse")
+    st_ = inq.init_state(w)
+    st_ = inq.freeze(st_, w, 0.5, cfg)
+    q_before = np.asarray(st_["w"]["q"]).copy()
+    mask = np.asarray(st_["w"]["mask"])
+    # latent weights change (training), frozen q must not
+    w2 = {"w": w["w"] + 1.0}
+    st2 = inq.freeze(st_, w2, 0.8, cfg)
+    q_after = np.asarray(st2["w"]["q"])
+    assert np.allclose(q_before[mask > 0], q_after[mask > 0])
+    # grads masked where frozen
+    g = {"w": jnp.ones((20, 5))}
+    gm = inq.mask_grads(st2, g)
+    assert np.all(np.asarray(gm["w"])[np.asarray(st2["w"]["mask"]) > 0] == 0)
+
+
+def test_inq_maginv_sparser_than_magnitude():
+    """The paper's Table IV mechanism: under the staged schedule, freezing
+    small weights first (each phase quantized by its group's statistics)
+    yields far more zeros than freezing large weights first."""
+    rng = np.random.default_rng(1)
+    w = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    out = {}
+    for strat in ("magnitude", "magnitude-inverse"):
+        cfg = inq.INQConfig(strategy=strat)
+        st_ = inq.init_state(w)
+        for frac in inq.PAPER_SCHEDULE:
+            st_ = inq.freeze(st_, w, frac, cfg)
+        eff = inq.apply(st_, w)
+        out[strat] = float(jnp.mean(eff["w"] == 0))
+    assert out["magnitude-inverse"] > 2 * out["magnitude"], out
+
+
+def test_inq_full_freeze_is_pure_ternary_times_scale():
+    rng = np.random.default_rng(2)
+    w = {"w": jnp.asarray(rng.normal(size=(30, 30)), jnp.float32)}
+    cfg = inq.INQConfig(strategy="zigzag", with_scale=True)
+    st_ = inq.freeze(inq.init_state(w), w, 1.0, cfg)
+    eff = np.asarray(inq.apply(st_, w)["w"])
+    vals = np.unique(eff)
+    assert len(vals) <= 3
+
+
+# ---------------------------------------------------------------------------
+# STE gradients
+# ---------------------------------------------------------------------------
+
+
+def test_ste_gradient_passthrough():
+    w = jnp.asarray([0.1, -0.9, 0.5, -0.01])
+
+    def f(w):
+        return jnp.sum(ternary.ternarize_ste(w) * jnp.arange(4.0))
+
+    g = jax.grad(f)(w)
+    assert np.allclose(np.asarray(g), np.arange(4.0))
+
+
+def test_act_ste_hardtanh_gradient():
+    x = jnp.asarray([-2.0, -0.4, 0.3, 1.7])
+
+    def f(x):
+        return jnp.sum(ternary.ternarize_act_ste(x))
+
+    g = np.asarray(jax.grad(f)(x))
+    assert g[0] == 0 and g[3] == 0          # outside [-1, 1]
+    assert g[1] == 1 and g[2] == 1          # inside

@@ -1,0 +1,144 @@
+"""Bit-true CUTIE engine: compilation, execution, pooling, QAT parity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cutie_cnn import CutieCNNConfig
+from repro.core import engine, folding
+from repro.models import cutie_cnn
+
+
+def _rand_layer(key, cin=8, cout=8, pool=None):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (3, 3, cin, cout))
+    bn = {"gamma": jax.random.normal(k2, (cout,)) + 0.5,
+          "beta": jnp.zeros((cout,)), "mean": jnp.zeros((cout,)),
+          "var": jnp.ones((cout,))}
+    return engine.compile_layer(w, bn, pool=pool)
+
+
+def test_compile_layer_pure_trits():
+    instr = _rand_layer(jax.random.PRNGKey(0))
+    vals = np.unique(np.asarray(instr.weights))
+    assert set(vals) <= {-1, 0, 1}
+    assert instr.weights.dtype == jnp.int8
+
+
+def test_program_validation():
+    inst = engine.CutieInstance(n_i=8, n_o=8, n_layers=2)
+    good = _rand_layer(jax.random.PRNGKey(0))
+    prog = engine.CutieProgram([good, good], inst)
+    prog.validate()
+    with pytest.raises(ValueError, match="exceed layer FIFO"):
+        engine.CutieProgram([good] * 3, inst).validate()
+    big = _rand_layer(jax.random.PRNGKey(1), cin=16)
+    with pytest.raises(ValueError, match="channels"):
+        engine.CutieProgram([big], inst).validate()
+
+
+def test_run_layer_integer_exact_vs_manual():
+    key = jax.random.PRNGKey(3)
+    instr = _rand_layer(key)
+    x = jax.random.randint(key, (2, 8, 8, 8), -1, 2).astype(jnp.int8)
+    out, z = engine.run_layer(x, instr)
+    # manual conv in numpy (padding 1)
+    xp = np.pad(np.asarray(x, np.int32), ((0, 0), (1, 1), (1, 1), (0, 0)))
+    w = np.asarray(instr.weights, np.int32)
+    zz = np.zeros((2, 8, 8, 8), np.int32)
+    for i in range(8):
+        for j in range(8):
+            patch = xp[:, i:i + 3, j:j + 3, :]
+            zz[:, i, j, :] = np.tensordot(patch, w, axes=([1, 2, 3],
+                                                          [0, 1, 2]))
+    assert np.array_equal(np.asarray(z), zz)
+    assert set(np.unique(np.asarray(out))) <= {-1, 0, 1}
+
+
+@pytest.mark.parametrize("kind", ["max", "avg"])
+def test_merged_pooling_semantics(kind):
+    """Engine pooling (pre-threshold) == float pipeline pool-then-quantize."""
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (3, 3, 8, 8))
+    bn = {"gamma": jax.random.normal(k2, (8,)) + 0.2,
+          "beta": jnp.zeros((8,)), "mean": jnp.zeros((8,)),
+          "var": jnp.ones((8,))}
+    instr = engine.compile_layer(w, bn, pool=(kind, 2))
+    x = jax.random.randint(key, (1, 8, 8, 8), -1, 2).astype(jnp.int8)
+    out, _ = engine.run_layer(x, instr)
+
+    # float oracle: conv -> BN -> pool -> hardtanh -> ternarize
+    z = engine.conv2d_int(x, instr.weights).astype(jnp.float32)
+    from repro.core import ternary as T
+    delta = T.twn_delta(w, axis=(0, 1, 2))
+    alpha = T.twn_scale(w, T.ternarize(w, delta), axis=(0, 1, 2)).reshape(-1)
+    y = bn["gamma"] * (alpha * z - bn["mean"]) / jnp.sqrt(
+        bn["var"] + 1e-5) + bn["beta"]
+    n, h, wd, c = y.shape
+    yr = y.reshape(n, h // 2, 2, wd // 2, 2, c)
+    y = (jnp.max(yr, axis=(2, 4)) if kind == "max"
+         else jnp.mean(yr, axis=(2, 4)))
+    y = jnp.clip(y, -1, 1)
+    want = ((y > 0.5).astype(np.int8) - (y < -0.5).astype(np.int8))
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_dense_as_conv_mapping():
+    w = jnp.asarray(np.random.default_rng(0).integers(
+        -1, 2, size=(200, 16)), jnp.float32)
+    wc = engine.dense_as_conv(w)
+    assert wc.shape == (3, 3, 128, 16)
+    # the conv on a one-hot "image" reproduces the dense product
+    x = jnp.asarray(np.random.default_rng(1).integers(
+        -1, 2, size=(200,)), jnp.int32)
+    xp = jnp.pad(x, (0, 1152 - 200)).reshape(1, 3, 3, 128)
+    z = engine.conv2d_int(xp, wc, padding=False)
+    want = x @ w.astype(jnp.int32)
+    assert np.array_equal(np.asarray(z).reshape(-1), np.asarray(want))
+    with pytest.raises(ValueError):
+        engine.dense_as_conv(jnp.zeros((2000, 10)))
+
+
+def test_layer_ops_formula():
+    instr = _rand_layer(jax.random.PRNGKey(5))
+    ops = engine.layer_ops(instr, (1, 32, 32, 8))
+    assert ops == 2 * 32 * 32 * 3 * 3 * 8 * 8
+
+
+def test_qat_graph_vs_engine_parity():
+    """Float QAT graph predictions == bit-true engine on the same params."""
+    cfg = CutieCNNConfig(width=8, thermometer_m=4)
+    params = cutie_cnn.init_params(cfg, jax.random.PRNGKey(0))
+    x_img = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32))
+    from repro.core import thermometer as TH
+    lv = TH.quantize_to_levels(
+        jax.random.uniform(jax.random.PRNGKey(2), (4, 32, 32, 3)), 8)
+    trits = TH.ternary_thermometer(lv, 4).reshape(4, 32, 32, 12)
+
+    logits, _ = cutie_cnn.forward(params, trits.astype(jnp.float32), cfg,
+                                  train=False)
+    prog = cutie_cnn.to_program(params, cfg, engine.CutieInstance(
+        n_i=16, n_o=16))
+    feats = engine.run_program(prog, trits.astype(jnp.int8))
+    fc_w = np.asarray(cutie_cnn._quant_w(params["fc"], cfg.weight_mode))
+    eng_logits = np.asarray(feats).reshape(4, -1).astype(np.float32) @ fc_w
+    agree = np.mean(np.argmax(np.asarray(logits), -1)
+                    == np.argmax(eng_logits, -1))
+    assert agree >= 0.75      # borderline float compares may differ
+
+
+def test_run_program_stats():
+    inst = engine.CutieInstance(n_i=8, n_o=8)
+    layers = [_rand_layer(jax.random.PRNGKey(i)) for i in range(3)]
+    prog = engine.CutieProgram(layers, inst)
+    x = jax.random.randint(jax.random.PRNGKey(9), (1, 8, 8, 8), -1, 2
+                           ).astype(jnp.int8)
+    out, stats = engine.run_program(prog, x, collect_stats=True)
+    assert len(stats) == 3
+    for s in stats:
+        assert 0 <= s["weight_sparsity"] <= 1
+        assert s["ops"] > 0

@@ -1,0 +1,173 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the ref.py oracle,
+swept over shapes, dtypes and epilogues."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _trits(key, shape):
+    return jax.random.randint(key, shape, -1, 2).astype(jnp.int8)
+
+
+def _packed_weights(key, k, n):
+    w = _trits(key, (k, n))
+    return w, ref.pack_trits(w.T).T            # (K/5, N) uint8
+
+
+# ---------------------------------------------------------------------------
+# trit codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,groups", [(1, 1), (8, 4), (128, 16),
+                                         (3, 25)])
+def test_codec_roundtrip_ref(rows, groups):
+    key = jax.random.PRNGKey(rows * 100 + groups)
+    t = _trits(key, (rows, 5 * groups))
+    b = ref.pack_trits(t)
+    assert b.dtype == jnp.uint8 and b.shape == (rows, groups)
+    assert jnp.array_equal(ref.unpack_trits(b), t)
+
+
+@pytest.mark.parametrize("rows,groups", [(8, 32), (128, 128)])
+def test_codec_pallas_matches_ref(rows, groups):
+    key = jax.random.PRNGKey(7)
+    t = _trits(key, (rows, 5 * groups))
+    b_ref = ref.pack_trits(t)
+    b_pl = ops.pack_trits(t, backend="pallas_interpret")
+    assert jnp.array_equal(b_ref, b_pl)
+    assert jnp.array_equal(
+        ops.unpack_trits(b_ref, backend="pallas_interpret"),
+        ref.unpack_trits(b_ref))
+
+
+# ---------------------------------------------------------------------------
+# ternary matmul (packed weights)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 40, 16), (128, 640, 128),
+                                   (256, 1280, 128), (32, 2560, 64)])
+@pytest.mark.parametrize("xdtype", ["int8", "bfloat16", "float32"])
+def test_matmul_no_epilogue(m, k, n, xdtype):
+    key = jax.random.PRNGKey(m + k + n)
+    k1, k2 = jax.random.split(key)
+    if xdtype == "int8":
+        x = _trits(k1, (m, k))
+    else:
+        x = jax.random.normal(k1, (m, k), jnp.float32).astype(xdtype)
+    _, wp = _packed_weights(k2, k, n)
+    y_ref = ref.ternary_matmul(x, wp)
+    y_pl = ops.ternary_matmul(x, wp, backend="pallas_interpret",
+                              bm=8, bn=8, bk5=4)
+    if xdtype == "int8":
+        assert y_ref.dtype == jnp.int32
+        assert jnp.array_equal(y_ref, y_pl)
+    else:
+        np.testing.assert_allclose(np.asarray(y_pl, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=2e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 320, 32), (64, 640, 128)])
+def test_matmul_scale_epilogue(m, k, n):
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _trits(k1, (m, k))
+    _, wp = _packed_weights(k2, k, n)
+    scale = jax.random.uniform(k3, (n,), jnp.float32, 0.1, 2.0)
+    y_ref = ref.ternary_matmul(x, wp, scale=scale)
+    y_pl = ops.ternary_matmul(x, wp, scale=scale,
+                              backend="pallas_interpret", bm=8, bn=16,
+                              bk5=8)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 320, 32), (128, 1280, 64)])
+def test_matmul_threshold_epilogue(m, k, n):
+    """Fused two-threshold ternarize epilogue (the OCU writeback)."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    x = _trits(ks[0], (m, k))
+    _, wp = _packed_weights(ks[1], k, n)
+    t_hi = jax.random.randint(ks[2], (n,), -20, 40).astype(jnp.float32)
+    t_lo = t_hi - jax.random.randint(ks[3], (n,), 1, 40).astype(jnp.float32)
+    flip = jax.random.bernoulli(ks[4], 0.3, (n,))
+    y_ref = ref.ternary_matmul(x, wp, t_lo=t_lo, t_hi=t_hi, flip=flip)
+    y_pl = ops.ternary_matmul(x, wp, t_lo=t_lo, t_hi=t_hi, flip=flip,
+                              backend="pallas_interpret", bm=8, bn=16,
+                              bk5=8)
+    assert y_ref.dtype == jnp.int8
+    assert set(np.unique(np.asarray(y_ref))) <= {-1, 0, 1}
+    assert jnp.array_equal(y_ref, y_pl)
+
+
+@pytest.mark.parametrize("m,k,n,bk", [(8, 64, 16, 32), (64, 512, 128, 128)])
+def test_matmul_dense_trits(m, k, n, bk):
+    key = jax.random.PRNGKey(11)
+    k1, k2 = jax.random.split(key)
+    x, w = _trits(k1, (m, k)), _trits(k2, (k, n))
+    y_ref = ref.ternary_matmul_dense(x, w)
+    y_pl = ops.ternary_matmul_dense(x, w, backend="pallas_interpret",
+                                    bm=8, bn=8, bk=bk)
+    assert jnp.array_equal(y_ref, y_pl)
+    # oracle of the oracle: plain int matmul
+    y_np = np.asarray(x, np.int32) @ np.asarray(w, np.int32)
+    assert np.array_equal(np.asarray(y_ref), y_np)
+
+
+# ---------------------------------------------------------------------------
+# ternary conv2d
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw,cin,cout,stride,padding", [
+    (8, 8, 8, (1, 1), True),
+    (16, 16, 32, (1, 1), False),
+    (16, 8, 16, (2, 2), True),
+    (9, 8, 8, (3, 3), True),
+])
+def test_conv2d_matches_ref(hw, cin, cout, stride, padding):
+    key = jax.random.PRNGKey(hw * cin)
+    k1, k2 = jax.random.split(key)
+    x = _trits(k1, (2, hw, hw, cin))
+    w = _trits(k2, (3, 3, cin, cout))
+    y_ref = ref.ternary_conv2d(x, w, stride=stride, padding=padding)
+    y_pl = ops.ternary_conv2d(x, w, stride=stride, padding=padding,
+                              backend="pallas_interpret")
+    assert jnp.array_equal(y_ref, y_pl)
+
+
+def test_conv2d_threshold_epilogue():
+    key = jax.random.PRNGKey(13)
+    ks = jax.random.split(key, 5)
+    x = _trits(ks[0], (1, 8, 8, 16))
+    w = _trits(ks[1], (3, 3, 16, 8))
+    t_hi = jax.random.randint(ks[2], (8,), -5, 10).astype(jnp.float32)
+    t_lo = t_hi - 6.0
+    flip = jax.random.bernoulli(ks[3], 0.5, (8,))
+    y_ref = ref.ternary_conv2d(x, w, t_lo=t_lo, t_hi=t_hi, flip=flip)
+    y_pl = ops.ternary_conv2d(x, w, t_lo=t_lo, t_hi=t_hi, flip=flip,
+                              backend="pallas_interpret")
+    assert jnp.array_equal(y_ref, y_pl)
+
+
+# ---------------------------------------------------------------------------
+# thermometer kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ternary", [True, False])
+def test_thermometer_kernel(ternary):
+    m = 16
+    hi = 2 * m if ternary else m
+    x = jnp.arange(0, hi + 1)
+    y_ref = ref.thermometer(x, m, ternary=ternary)
+    y_pl = ops.thermometer(x, m, ternary=ternary,
+                           backend="pallas_interpret")
+    assert jnp.array_equal(y_ref, y_pl)
