@@ -44,6 +44,19 @@ def run(hw: int = 16, c: int = 64, seed: int = 0) -> dict:
                 "window_hamming_per256": st.window_hamming
                 / (9 * c) * 256.0,
             }
+    # the pipeline's SwitchingTracer must reproduce the direct measurement
+    # (same window_toggle, traced inside the jitted whole-program run)
+    from repro.core import engine
+    from repro.pipeline import CutiePipeline, SwitchingTracer
+
+    x = _feature_map(ks[2], hw, c, "ternary")
+    w = _weights(ks[3], 3, c, c, 0.55, "ternary")
+    instr = engine.compile_layer(w.astype(jnp.float32), {})
+    prog = engine.CutieProgram([instr], engine.CutieInstance(n_i=c, n_o=c))
+    _, rows = CutiePipeline(prog).run(x[None], tracer=SwitchingTracer())
+    direct = switching.unrolled_toggle(x, instr.weights)
+    traced_ok = abs(rows[0]["act_toggle"] - direct.mult_toggle) < 1e-6
+
     # paper's ordered claims
     checks = {
         "ternary_adder_below_binary_unrolled":
@@ -55,6 +68,7 @@ def run(hw: int = 16, c: int = 64, seed: int = 0) -> dict:
         "unrolled_below_iterative_binary":
             out["binary_unrolled"]["adder_toggle"]
             < out["binary_iterative"]["adder_toggle"],
+        "tracer_matches_direct_measurement": traced_ok,
     }
     return {"corners": out, "checks": checks}
 

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.data import cifar
 from repro.energy import model as E
+from repro.pipeline import CutiePipeline, SwitchingTracer
 from repro.train import cutie_qat as Q
 
 
@@ -24,9 +25,14 @@ def run(width: int = 16, steps: int = 200) -> dict:
                             m=res["cfg"].thermometer_m, ternary=True)
     x = jnp.asarray(b["x"]).astype(jnp.int8)
 
+    # One traced execution through the pipeline; the three technology
+    # price-outs reuse the same measured switching rows.
+    pipe = CutiePipeline(prog)
+    _, rows = pipe.run(x, tracer=SwitchingTracer())
+
     out = {}
     for tech in ("GF22_SCM", "GF22_SRAM", "TSMC7_SCM"):
-        en = E.program_energy(prog, x, E.EnergyParams(tech))
+        en = E.network_energy(rows, E.EnergyParams(tech))
         out[tech] = {
             "per_layer_tops_w": [r["tops_w"] for r in en["layers"]],
             "avg_tops_w": en["avg_tops_w"],

@@ -15,9 +15,9 @@ import os
 import time
 import traceback
 
-from benchmarks import (fig6_channels, fig10_switching, fig11_energy,
-                        roofline_report, table2_tiling, table4_strategies,
-                        table5_sota)
+from benchmarks import (backend_parity, fig6_channels, fig10_switching,
+                        fig11_energy, roofline_report, table2_tiling,
+                        table4_strategies, table5_sota)
 
 HEAVY = {"table4", "fig11"}
 
@@ -29,6 +29,7 @@ BENCHES = {
     "fig11": fig11_energy,
     "table5": table5_sota,
     "roofline": roofline_report,
+    "backends": backend_parity,
 }
 
 

@@ -43,15 +43,16 @@ PAPER = {  # (mode, strategy) -> (acc %, sparsity %, TOp/s/W), BT rows
 
 
 def _energy_row(result: dict) -> dict:
-    """Price the trained net with the energy model on measured stats."""
+    """Price the trained net on measured stats via the traced pipeline."""
+    from repro.pipeline import CutiePipeline
+
     prog = Q.to_program(result)
     rc = result["run_config"]
     b = cifar.encoded_batch(rc.data, "test", 0, 4,
                             m=result["cfg"].thermometer_m,
                             ternary=rc.thermometer == "ternary")
     x = jnp.asarray(b["x"]).astype(jnp.int8)
-    params = E.EnergyParams("GF22_SCM")
-    return E.program_energy(prog, x, params)
+    return CutiePipeline(prog).measure(x, E.EnergyParams("GF22_SCM"))
 
 
 def _postprocess(out: dict) -> dict:

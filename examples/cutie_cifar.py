@@ -4,10 +4,12 @@
 
 1. trains the CUTIE CNN (Table III layout) on synthcifar with INQ staged
    quantization (Fig. 8 schedule, Magnitude-Inverse strategy),
-2. compiles the trained float graph into the bit-true CUTIE program
-   (pure-trit weights + folded two-threshold activations),
-3. checks QAT-graph vs bit-true-engine prediction parity,
-4. prices the inference with the calibrated energy model (TOp/s/W, µJ).
+2. compiles the trained float graph into the bit-true CUTIE program and
+   binds it to a `CutiePipeline` (pure-trit weights + folded two-threshold
+   activations, pluggable execution backend),
+3. checks QAT-graph vs bit-true-pipeline prediction parity,
+4. prices the inference via the pipeline's traced switching activity and
+   the calibrated energy model (TOp/s/W, µJ).
 """
 
 import argparse
@@ -15,10 +17,10 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine
 from repro.data import cifar
 from repro.energy import model as E
 from repro.models import cutie_cnn
+from repro.pipeline import CutiePipeline
 from repro.train import cutie_qat as Q
 
 
@@ -29,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--strategy", default="magnitude-inverse")
     ap.add_argument("--mode", default="ternary",
                     choices=["ternary", "binary"])
+    ap.add_argument("--backend", default=None,
+                    help="execution backend: ref | pallas | packed "
+                         "(default: auto)")
     args = ap.parse_args(argv)
 
     rc = Q.QATRunConfig(width=args.width, steps=args.steps,
@@ -41,7 +46,8 @@ def main(argv=None):
 
     print("compiling to bit-true CUTIE program ...")
     prog = Q.to_program(res)
-    prog.validate()
+    pipe = CutiePipeline(prog, backend=args.backend)
+    print(f"  {pipe}")
 
     # parity: QAT graph argmax == engine argmax on a test batch
     b = cifar.encoded_batch(rc.data, "test", 0, 16,
@@ -52,17 +58,17 @@ def main(argv=None):
         inq_state={"layers": res["inq_state"]["layers"]})
     qat_pred = np.asarray(jnp.argmax(logits, -1))
 
-    feats = engine.run_program(prog, x_trits)
-    # final FC runs on the engine's trit features (fp head, like the paper)
+    feats = pipe.run(x_trits)
+    # final FC runs on the pipeline's trit features (fp head, like the paper)
     fc = np.asarray(res["params"]["fc"])
     eng_pred = np.argmax(
         np.asarray(feats).reshape(16, -1).astype(np.float32) @ fc, -1)
     agree = float(np.mean(qat_pred == eng_pred))
-    print(f"  QAT-graph vs bit-true engine argmax agreement: {agree:.2f}")
+    print(f"  QAT-graph vs bit-true pipeline argmax agreement: {agree:.2f}")
 
     print("pricing with the calibrated energy model ...")
     for tech in ("GF22_SCM", "TSMC7_SCM"):
-        en = E.program_energy(prog, x_trits[:1], E.EnergyParams(tech))
+        en = pipe.measure(x_trits[:1], E.EnergyParams(tech))
         print(f"  {tech}: avg {en['avg_tops_w']:.0f} TOp/s/W, "
               f"peak {en['peak_tops_w']:.0f}, "
               f"{en['energy_uj']:.3f} uJ/inference")

@@ -1,14 +1,24 @@
-"""Quickstart: the CUTIE primitives in five minutes.
+"""Quickstart: the CUTIE pipeline in five minutes.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's pipeline end-to-end on toy tensors:
-  1. ternary thermometer input encoding (§III-D),
-  2. STE ternarization + TWN scales (§II-A),
-  3. threshold folding: conv+BN+Hardtanh+ternarize -> 2 compares (§III-C),
-  4. the 5-trits-per-byte codec (§III-A),
-  5. the packed-trit ternary matmul kernel (ref + Pallas-interpret),
-  6. the switching-activity/energy story (§V-C..E).
+Everything routes through ONE surface — `repro.pipeline.CutiePipeline`:
+compile a network into a bit-true CUTIE program (the layer FIFO), run it
+as a single jitted whole-program execution on a pluggable backend
+(``ref`` | ``pallas`` | ``packed``), measure it with a first-class Tracer
+hook feeding the calibrated energy model, and serve it through the
+slot-batched server.
+
+Steps:
+  1. compile: ternary conv+BN layers -> pure-trit weights + folded
+     two-threshold activations (§III-C) behind `CutiePipeline.compile`,
+  2. run: the same compiled program, bit-identical on all three backends
+     (`lax.conv` oracle / Pallas OCU-array kernel / packed 5-trits-per-byte
+     weights decoded next to compute, §III-A),
+  3. measure: traced switching activity -> TOp/s/W (§V-C..E),
+  4. serve: continuous slot batching over the same pipeline object,
+  5. the underlying primitives (thermometer §III-D, TWN ternarize §II-A,
+     threshold folding §III-C) for when you need them raw.
 """
 
 import jax
@@ -16,65 +26,63 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import folding, ternary, thermometer
-from repro.energy import model as energy_model, switching
-from repro.kernels import ops, ref
+from repro.pipeline import (CutiePipeline, StatsTracer, available_backends,
+                            default_backend_name)
 
 
 def main():
     key = jax.random.PRNGKey(0)
 
-    # 1. thermometer encoding ------------------------------------------------
-    x = jnp.asarray([110, 128, 200])
-    enc = thermometer.ternary_thermometer(x, m=128)
-    print(f"ternary thermometer of {list(map(int, x))}: "
-          f"zeros={float(jnp.mean(enc == 0)):.2f} "
-          f"(paper: first layer ~66% zeros)")
+    # 1. compile ------------------------------------------------------------
+    c, depth = 16, 3
+    specs = []
+    for k in jax.random.split(key, depth):
+        w = jax.random.normal(k, (3, 3, c, c))          # latent float conv
+        bn = {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+              "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+        specs.append((w, bn))
+    pipe = CutiePipeline.compile(specs)
+    print(f"compiled {pipe} (auto backend: {default_backend_name()!r})")
 
-    # 2. weight ternarization ------------------------------------------------
+    # 2. run on every backend — bit-identical trits --------------------------
+    x = jax.random.randint(key, (2, 16, 16, c), -1, 2).astype(jnp.int8)
+    outs = {}
+    for be in available_backends():
+        outs[be] = np.asarray(CutiePipeline(pipe.program, backend=be).run(x))
+    assert all(np.array_equal(outs["ref"], o) for o in outs.values())
+    print(f"run: {sorted(outs)} backends bit-identical, out {outs['ref'].shape}")
+
+    # 3. measure — tracer-fed energy model -----------------------------------
+    y, rows = pipe.run(x, tracer=StatsTracer())
+    print(f"traced stats: layer-0 out sparsity {rows[0]['out_sparsity']:.2f}, "
+          f"{sum(r['ops'] for r in rows):,} ops")
+    en = pipe.measure(x)
+    print(f"measure: {en['avg_tops_w']:.0f} TOp/s/W avg, "
+          f"{en['energy_uj']:.3f} uJ/inference (GF22 SCM; paper avg 392)")
+
+    # 4. serve — slot-batched continuous batching ----------------------------
+    server = pipe.serve()
+    uids = [server.submit(np.asarray(x[i % 2])) for i in range(6)]
+    results = server.run()
+    assert np.array_equal(results[uids[0]], outs["ref"][0])
+    print(f"serve: {len(results)} requests in {server.n_batches} batches "
+          f"of {server.scfg.n_slots} slots")
+
+    # 5. the primitives underneath ------------------------------------------
+    enc = thermometer.ternary_thermometer(jnp.asarray([110, 128, 200]), m=128)
+    print(f"thermometer: zeros={float(jnp.mean(enc == 0)):.2f} "
+          f"(paper: first layer ~66% zeros)")
     w = jax.random.normal(key, (64, 32))
     wq = ternary.ternarize(w, ternary.twn_delta(w))
-    print(f"TWN ternarize: sparsity={float(ternary.sparsity(wq)):.2f} "
-          f"(delta=0.7*mean|w|)")
-
-    # 3. threshold folding ---------------------------------------------------
+    print(f"TWN ternarize: sparsity={float(ternary.sparsity(wq)):.2f}")
     z = jax.random.randint(key, (8, 32), -200, 200)
     bn = dict(alpha=jnp.full((32,), 0.05), bias=jnp.zeros((32,)),
               gamma=jax.random.normal(key, (32,)), beta=jnp.zeros((32,)),
               mean=jnp.zeros((32,)), var=jnp.ones((32,)))
     th = folding.fold_thresholds(**bn)
-    out_folded = folding.apply_thresholds(z, th)
-    out_ref = folding.reference_float_activation(z, **bn)
-    assert jnp.array_equal(out_folded, out_ref)
+    assert jnp.array_equal(folding.apply_thresholds(z, th),
+                           folding.reference_float_activation(z, **bn))
     print("threshold folding == float(BN+hardtanh+ternarize): exact")
-
-    # 4. trit codec ----------------------------------------------------------
-    trits = ternary.ternarize(jax.random.normal(key, (4, 40)), 0.6)
-    packed = ref.pack_trits(trits.astype(jnp.int8))
-    assert jnp.array_equal(ref.unpack_trits(packed), trits.astype(jnp.int8))
-    print(f"trit codec: {trits.size} trits -> {packed.size} bytes "
-          f"({8 * packed.size / trits.size:.1f} bits/trit)")
-
-    # 5. packed ternary matmul (the OCU-array kernel) ------------------------
-    xm = jax.random.randint(key, (128, 640), -1, 2).astype(jnp.int8)
-    wm = ternary.ternarize(jax.random.normal(key, (640, 128)), 0.5)
-    wp = ref.pack_trits(wm.astype(jnp.int8).T).T
-    y_ref = ops.ternary_matmul(xm, wp, backend="ref")
-    y_pl = ops.ternary_matmul(xm, wp, backend="pallas_interpret")
-    assert jnp.array_equal(y_ref, y_pl)
-    print(f"ternary matmul: ref == pallas(interpret), out int32 "
-          f"max|acc|={int(jnp.max(jnp.abs(y_ref)))}")
-
-    # 6. energy story ---------------------------------------------------------
-    fm = ternary.ternarize(jax.random.normal(key, (16, 16, 64)), 0.6)
-    wconv = ternary.ternarize(jax.random.normal(key, (3, 3, 64, 64)), 0.6)
-    for machine in ("unrolled", "iterative"):
-        st = switching.layer_switching(
-            np.asarray(fm), np.asarray(wconv), machine=machine)
-        print(f"  {machine:9s}: adder-tree toggle={st.adder_toggle:.3f}")
-    p = energy_model.EnergyParams("GF22_SCM")
-    print(f"model: 60.7%-sparse ternary @22nm = "
-          f"{p.efficiency_tops_w(0.393, energy_model.TERNARY_ACT_TOGGLE):.0f}"
-          f" TOp/s/W (paper: 392)")
     print("quickstart OK")
 
 

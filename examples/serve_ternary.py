@@ -2,11 +2,14 @@
 e2e example is serving): continuous batching over a ternary-weight model.
 
     PYTHONPATH=src python examples/serve_ternary.py [--requests 12]
+    PYTHONPATH=src python examples/serve_ternary.py --cutie [--backend ref]
 
-Serves the same (reduced) llama backbone in two weight modes:
-  * bf16 baseline,
-  * ternary_packed — weights stored as packed trits (5/byte, 10x smaller
-    than bf16) and decoded next to the matmul, the paper's deployment path.
+Two serving paths share the slot-batched loop:
+  * LLM (default): the (reduced) llama backbone in bf16 vs ternary_packed
+    weight modes (packed trits, 5/byte, decoded next to the matmul),
+  * --cutie: a compiled CUTIE CNN program served through
+    ``CutiePipeline(...).serve()`` — image requests, whole-program jitted
+    execution per slot batch, any of the ref/pallas/packed backends.
 Prints throughput and the weight-bytes comparison.
 """
 
@@ -14,12 +17,49 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
 from repro.models import transformer as TF
 from repro.models.config import reduce_for_smoke
 from repro.serving import Server, ServerConfig
+
+
+def serve_cutie(args) -> None:
+    """Slot-batched image serving over one CutiePipeline object."""
+    from repro.core import codec, engine
+    from repro.pipeline import CutiePipeline
+
+    c, hw, depth = 16, 16, 5
+    keys = jax.random.split(jax.random.PRNGKey(0), depth)
+    specs = []
+    for k in keys:
+        bn = {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+              "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+        specs.append((jax.random.normal(k, (3, 3, c, c)), bn))
+    pipe = CutiePipeline.compile(
+        specs, instance=engine.CutieInstance(n_i=c, n_o=c),
+        backend=args.backend)
+    server = pipe.serve()
+
+    rng = np.random.default_rng(0)
+    imgs = [rng.integers(-1, 2, size=(hw, hw, c)).astype(np.int8)
+            for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    for im in imgs:
+        server.submit(im)
+    outs = server.run()
+    dt = time.perf_counter() - t0
+
+    dense = sum(i.weights.size for i in pipe.program.layers)
+    packed = sum(codec.packed_size(i.weights.size)
+                 for i in pipe.program.layers)
+    print(f"[cutie/{pipe.backend_name}] {len(outs)} images in "
+          f"{server.n_batches} slot batches, {len(outs) / dt:.1f} imgs/s "
+          f"(scan={pipe.scannable})")
+    print(f"weights: {dense} trits -> {packed} packed bytes "
+          f"({8 * packed / dense:.1f} bits/trit vs 8 dense)")
 
 
 def _weight_bytes(params) -> int:
@@ -32,7 +72,14 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--cutie", action="store_true",
+                    help="serve a compiled CUTIE CNN program instead")
+    ap.add_argument("--backend", default=None,
+                    help="CUTIE execution backend: ref | pallas | packed")
     args = ap.parse_args(argv)
+
+    if args.cutie:
+        return serve_cutie(args)
 
     base = reduce_for_smoke(configs.get(args.arch))
     rng = np.random.default_rng(0)

@@ -14,9 +14,12 @@ Everything the executor computes is integer-exact:
     thresholds, max = max of sign(g)*z),
   * the two-threshold compare produces the next layer's trits.
 
-The executor doubles as the data source for the energy model: it returns
-per-layer tensors from which switching activity / sparsity statistics are
-derived (`repro.energy`).
+Whole-program execution lives in `repro.pipeline` (`CutiePipeline`), which
+runs compiled programs through pluggable backends (ref / Pallas / packed)
+with stats collection as a first-class Tracer hook; `run_program` here is a
+thin deprecated shim over it.  This module keeps the compiler
+(`compile_layer`, `CutieProgram`) and the single-layer reference semantics
+(`run_layer`) that the backends share.
 """
 
 from __future__ import annotations
@@ -84,6 +87,10 @@ class LayerInstr:
     @property
     def kernel_size(self) -> int:
         return self.weights.shape[0]
+
+    def _replace_thresholds(self, th) -> "LayerInstr":
+        """Copy with substituted threshold arrays (scan slices them)."""
+        return dataclasses.replace(self, thresholds=th)
 
 
 @dataclasses.dataclass
@@ -191,28 +198,28 @@ def run_layer(x: Array, instr: LayerInstr) -> tuple[Array, Array]:
 
 def run_program(program: CutieProgram, x: Array,
                 collect_stats: bool = False):
-    """Execute a full network on input trits x (N, H, W, C) int8.
+    """DEPRECATED shim — use :class:`repro.pipeline.CutiePipeline`.
 
-    Returns the final trit tensor; with ``collect_stats`` also a per-layer
-    list of dicts feeding the energy model (activation/weight sparsity and
-    the tensors needed for toggle-rate analysis).
+    Executes the program through the unified pipeline on the ``ref``
+    backend; ``collect_stats=True`` maps onto the first-class
+    ``StatsTracer`` hook and returns the same per-layer dict rows as
+    before.  New code should pick a backend and a tracer explicitly:
+
+        pipe = CutiePipeline(program, backend="pallas")
+        out, rows = pipe.run(x, tracer=StatsTracer())
     """
-    program.validate()
-    stats = []
-    for instr in program.layers:
-        y, z = run_layer(x, instr)
-        if collect_stats:
-            stats.append({
-                "in_sparsity": float(jnp.mean(x == 0)),
-                "weight_sparsity": float(jnp.mean(instr.weights == 0)),
-                "out_sparsity": float(jnp.mean(y == 0)),
-                "in_shape": tuple(x.shape),
-                "out_shape": tuple(y.shape),
-                "kernel": tuple(instr.weights.shape),
-                "ops": layer_ops(instr, x.shape),
-            })
-        x = y
-    return (x, stats) if collect_stats else x
+    import warnings
+
+    from repro.pipeline import CutiePipeline, StatsTracer
+
+    warnings.warn(
+        "engine.run_program is deprecated; use repro.pipeline.CutiePipeline"
+        " (backend= instead of an implicit ref path, Tracer instead of"
+        " collect_stats)", DeprecationWarning, stacklevel=2)
+    pipe = CutiePipeline(program, backend="ref")
+    if collect_stats:
+        return pipe.run(x, tracer=StatsTracer())
+    return pipe.run(x)
 
 
 def layer_ops(instr: LayerInstr, in_shape) -> int:
@@ -222,21 +229,33 @@ def layer_ops(instr: LayerInstr, in_shape) -> int:
     """
     k, _, cin, cout = instr.weights.shape
     _, h, w, _ = in_shape
-    if instr.padding:
-        oh, ow = h // instr.stride[0], w // instr.stride[1]
-    else:
-        oh = (h - k) // instr.stride[0] + 1
-        ow = (w - k) // instr.stride[1] + 1
+    oh, ow = conv_out_hw(instr, h, w)
     return 2 * ow * oh * k * k * cin * cout
 
 
-def dense_as_conv(w_dense: Array, max_in: int = 1152,
-                  max_out: int = 128) -> Array:
-    """Map a ternary dense layer onto a 3x3 OCU weight buffer (paper §III-E):
-    inputs up to 3*3*128 = 1152 map into the (K,K,Cin) axes."""
+def conv_out_hw(instr: LayerInstr, h: int, w: int) -> tuple[int, int]:
+    """Output spatial dims of one conv (pre-pooling), matching the padded
+    conv exactly: ceil(H/s) rows for odd K with full zero padding."""
+    k = instr.kernel_size
+    sh, sw = instr.stride
+    if instr.padding:
+        return -(-h // sh), -(-w // sw)
+    return (h - k) // sh + 1, (w - k) // sw + 1
+
+
+def dense_as_conv(w_dense: Array,
+                  instance: CutieInstance = GF22_SCM) -> Array:
+    """Map a ternary dense layer onto a KxK OCU weight buffer (paper §III-E).
+
+    The OCU buffer of an instantiation holds K*K*N_I weights per output
+    channel (1152 for the paper's design point), so dense inputs up to that
+    size map into the (K, K, Cin) axes.
+    """
     d_in, d_out = w_dense.shape
-    if d_in > max_in or d_out > max_out:
-        raise ValueError(f"dense {w_dense.shape} exceeds OCU buffer")
-    pad_in = max_in - d_in
-    w = jnp.pad(w_dense, ((0, pad_in), (0, 0)))
-    return w.reshape(3, 3, 128, d_out)
+    max_in = instance.k * instance.k * instance.n_i
+    if d_in > max_in or d_out > instance.n_o:
+        raise ValueError(
+            f"dense {w_dense.shape} exceeds OCU buffer "
+            f"({instance.k}x{instance.k}x{instance.n_i} -> {instance.n_o})")
+    w = jnp.pad(w_dense, ((0, max_in - d_in), (0, 0)))
+    return w.reshape(instance.k, instance.k, instance.n_i, d_out)

@@ -148,32 +148,19 @@ def network_energy(layer_stats: list, params: EnergyParams) -> dict:
     }
 
 
-def program_energy(program, x, params: EnergyParams | None = None) -> dict:
-    """Run the bit-true engine over input trits and price every layer.
+def program_energy(program, x, params: EnergyParams | None = None,
+                   backend: str | None = "ref") -> dict:
+    """Run the compiled program and price every layer.
 
-    Uses the *measured* unrolled-machine toggle rates from
-    `energy.switching` on the actual intermediate feature maps — the same
-    procedure as the paper's testbench (annotated switching activities).
+    Executes through `repro.pipeline.CutiePipeline` with its
+    ``SwitchingTracer``: the *measured* unrolled-machine toggle rates
+    (`energy.switching.window_toggle`) are collected inside the same jitted
+    whole-program execution — the paper testbench's annotated switching
+    activities, with no second pass over the network.
     """
-    from repro.core import engine
-    from repro.energy import switching
+    from repro.pipeline import CutiePipeline
 
-    params = params or EnergyParams(program.instance.technology)
-    stats = []
-    cur = x
-    for instr in program.layers:
-        sw = switching.unrolled_toggle(cur[0], instr.weights,
-                                       padding=instr.padding)
-        density = float(np.mean(np.asarray(instr.weights) != 0))
-        stats.append({
-            "ops": engine.layer_ops(instr, cur.shape),
-            "weight_density": density,
-            "act_toggle": sw.mult_toggle,
-        })
-        cur, _ = engine.run_layer(cur, instr)
-    out = network_energy(stats, params)
-    out["final"] = cur
-    return out
+    return CutiePipeline(program, backend=backend).measure(x, params)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,23 @@ def _windows_raster(x: Array, k: int, padding: bool = True) -> Array:
     return p.reshape(n_h * n_w, k * k * c)
 
 
+def window_toggle(x: Array, k: int, *, padding: bool = True
+                  ) -> dict[str, Array]:
+    """Traced activation-window toggle statistics of the unrolled schedule.
+
+    Weight-independent part of :func:`unrolled_toggle` — jit-safe, so the
+    pipeline's :class:`repro.pipeline.SwitchingTracer` can run it inside the
+    whole-program jitted execution.  x: (H, W, Cin) trits.
+    """
+    win = _windows_raster(x, k, padding)              # (n, K*K*Cin)
+    diff = win[1:] != win[:-1]                        # (n-1, K*K*Cin)
+    return {
+        "mult_toggle": jnp.mean(diff.astype(jnp.float32)),
+        "window_hamming": jnp.mean(
+            jnp.sum(diff, axis=1).astype(jnp.float32)),
+    }
+
+
 def unrolled_toggle(x: Array, w: Array, *, padding: bool = True
                     ) -> SwitchingStats:
     """CUTIE schedule: one window per cycle, weights stationary.
@@ -65,17 +82,16 @@ def unrolled_toggle(x: Array, w: Array, *, padding: bool = True
     x: (H, W, Cin) trits;  w: (K, K, Cin, Cout) trits.
     """
     k = w.shape[0]
-    win = _windows_raster(x, k, padding)              # (n, K*K*Cin)
-    diff = win[1:] != win[:-1]                        # (n-1, K*K*Cin)
-    mult_t = jnp.mean(diff.astype(jnp.float32))
+    tg = window_toggle(x, k, padding=padding)
+    mult_t = tg["mult_toggle"]
     # adder-tree input node c of OCU o is silenced when w[.., o] == 0.
     w_flat = (w.reshape(-1, w.shape[-1]) != 0)        # (K*K*Cin, Cout)
     nz = jnp.mean(w_flat.astype(jnp.float32))         # weight density
-    adder_t = mult_t * nz
-    ham = jnp.mean(jnp.sum(diff, axis=1).astype(jnp.float32))
+    h, wd = x.shape[0], x.shape[1]
+    n_win = h * wd if padding else (h - k + 1) * (wd - k + 1)
     return SwitchingStats(
-        mult_toggle=float(mult_t), adder_toggle=float(adder_t),
-        window_hamming=float(ham), n_cycles=int(win.shape[0]))
+        mult_toggle=float(mult_t), adder_toggle=float(mult_t * nz),
+        window_hamming=float(tg["window_hamming"]), n_cycles=n_win)
 
 
 def iterative_toggle(x: Array, w: Array, *, decompose: int = 2,

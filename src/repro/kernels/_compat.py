@@ -1,0 +1,17 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and the
+``dimension_semantics`` kwarg rode along); this container pins an older jax,
+so resolve whichever name exists at import time.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either jax naming."""
+    return _CLS(**kwargs)

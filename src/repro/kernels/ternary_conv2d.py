@@ -24,7 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import compiler_params
 
 
 def _conv_kernel(x_ref, w_ref, *rest, k: int, stride, oh: int, ow: int,
@@ -102,7 +103,7 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
         ],
         out_specs=pl.BlockSpec((1, oh, ow, bco), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x.astype(jnp.int8), w.astype(jnp.int8), *ep)

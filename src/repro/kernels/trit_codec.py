@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import compiler_params
 
 TRITS_PER_BYTE = 5
 
@@ -54,7 +55,7 @@ def pack_trits_pallas(t, *, br: int = 256, bg: int = 128,
                                lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br, bg), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, g), jnp.uint8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(t)
@@ -73,7 +74,7 @@ def unpack_trits_pallas(b, *, br: int = 256, bg: int = 128,
         out_specs=pl.BlockSpec((br, bg * TRITS_PER_BYTE),
                                lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, g * TRITS_PER_BYTE), jnp.int8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(b)

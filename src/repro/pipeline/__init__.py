@@ -1,0 +1,20 @@
+"""Unified CUTIE execution API: compile → run → measure → serve.
+
+One Program surface over pluggable execution backends (paper §III: the
+compiled layer FIFO drives the datapath autonomously), with stats
+collection as a first-class Tracer hook.
+"""
+
+from repro.pipeline.backends import (Backend, PackedBackend, PallasBackend,
+                                     RefBackend, available_backends,
+                                     default_backend_name, get_backend)
+from repro.pipeline.pipeline import (CutiePipeline, layer_out_shape,
+                                     program_shapes)
+from repro.pipeline.tracer import StatsTracer, SwitchingTracer, Tracer
+
+__all__ = [
+    "Backend", "RefBackend", "PallasBackend", "PackedBackend",
+    "available_backends", "default_backend_name", "get_backend",
+    "CutiePipeline", "layer_out_shape", "program_shapes",
+    "Tracer", "StatsTracer", "SwitchingTracer",
+]

@@ -1,0 +1,171 @@
+"""Pluggable execution backends for compiled CUTIE programs.
+
+A backend maps each compiled :class:`repro.core.engine.LayerInstr` onto an
+executable representation once at pipeline-construction time (``lower``) and
+then runs it inside the jitted program (``apply``).  All backends share one
+layer epilogue (merged pooling on pre-threshold integers + the folded
+two-threshold compare), so their trit outputs are bit-identical — the same
+compiled program runs on any of them, like the ASIC's layer FIFO driving
+different micro-architectural implementations of the OCU array.
+
+Backends:
+
+* ``ref``    — ``lax.conv_general_dilated`` int32 oracle (fast on CPU),
+* ``pallas`` — the weight-stationary Pallas OCU-array kernel
+  (`repro.kernels.ternary_conv2d`); interpret mode off-TPU.  Layers without
+  merged pooling use the kernel's fused threshold epilogue, so the int32
+  accumulator never leaves VMEM,
+* ``packed`` — weights stored packed at 5 trits/byte
+  (`repro.kernels.trit_codec`, paper §III-A) and decoded next to the
+  compute; the deployment/HBM-compression path.
+
+Selection: by name via :func:`get_backend`, or auto-detected (``pallas`` on
+TPU, else ``ref``); the ``REPRO_PIPELINE_BACKEND`` env var overrides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec, engine, folding
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001 — no devices at all
+        return False
+
+
+def _finish_layer(z: Array, instr: engine.LayerInstr) -> Array:
+    """Shared epilogue: merged pooling (pre-threshold) + folded compares."""
+    if instr.pool is not None:
+        z = engine._pool_pre_threshold(z, instr.thresholds, instr.pool)
+    return folding.apply_thresholds(z, instr.thresholds)
+
+
+class Backend:
+    """Protocol: lower a LayerInstr once, apply it inside the jitted run.
+
+    ``lower`` returns an arrays-only pytree (so uniform programs can be
+    stacked and scanned); static metadata stays on the LayerInstr, which
+    ``apply`` receives alongside.  ``apply`` must be traceable and must
+    produce trit outputs bit-identical to the ``ref`` backend.
+    """
+
+    name: str = "?"
+
+    def lower(self, instr: engine.LayerInstr) -> Any:
+        raise NotImplementedError
+
+    def apply(self, lowered: Any, x: Array, instr: engine.LayerInstr) -> Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class RefBackend(Backend):
+    """Pure-jnp oracle: integer conv via ``lax.conv_general_dilated``."""
+
+    name: str = dataclasses.field(default="ref", init=False)
+
+    def lower(self, instr):
+        return {"w": instr.weights, "th": instr.thresholds}
+
+    def apply(self, lowered, x, instr):
+        z = engine.conv2d_int(x, lowered["w"], instr.stride, instr.padding)
+        return _finish_layer(z, instr._replace_thresholds(lowered["th"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(Backend):
+    """Weight-stationary Pallas OCU-array conv (fused epilogue when legal)."""
+
+    interpret: bool = dataclasses.field(default_factory=lambda: not _on_tpu())
+    name: str = dataclasses.field(default="pallas", init=False)
+
+    def lower(self, instr):
+        return {"w": instr.weights, "th": instr.thresholds}
+
+    def apply(self, lowered, x, instr):
+        from repro.kernels import ternary_conv2d as K
+
+        th: folding.ChannelThresholds = lowered["th"]
+        if instr.pool is None:
+            # Fused path: two-threshold compare inside the kernel epilogue.
+            # Degenerate (g == 0) channels are not representable there; fix
+            # them up with the stored per-channel constant.
+            y = K.ternary_conv2d_pallas(
+                x, lowered["w"], stride=instr.stride, padding=instr.padding,
+                t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
+                interpret=self.interpret)
+            return jnp.where(th.is_const, th.const, y)
+        z = K.ternary_conv2d_pallas(
+            x, lowered["w"], stride=instr.stride, padding=instr.padding,
+            interpret=self.interpret)
+        return _finish_layer(z, instr._replace_thresholds(th))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBackend(Backend):
+    """Weights live packed (5 trits/byte) and are decoded next to compute."""
+
+    interpret: bool = dataclasses.field(default_factory=lambda: not _on_tpu())
+    name: str = dataclasses.field(default="packed", init=False)
+
+    def lower(self, instr):
+        flat = instr.weights.reshape(-1)
+        return {"wp": codec.pack_trits(flat), "th": instr.thresholds}
+
+    def _decode(self, wp: Array, shape: tuple[int, ...]) -> Array:
+        from repro.kernels import trit_codec as C
+
+        n = 1
+        for d in shape:
+            n *= d
+        g = wp.shape[0]
+        trits = C.unpack_trits_pallas(wp.reshape(1, g), br=1, bg=g,
+                                      interpret=self.interpret)
+        return trits.reshape(-1)[:n].reshape(shape)
+
+    def apply(self, lowered, x, instr):
+        w = self._decode(lowered["wp"], tuple(instr.weights.shape))
+        z = engine.conv2d_int(x, w, instr.stride, instr.padding)
+        return _finish_layer(z, instr._replace_thresholds(lowered["th"]))
+
+
+_REGISTRY = {
+    "ref": RefBackend,
+    "pallas": PallasBackend,
+    "packed": PackedBackend,
+}
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def default_backend_name() -> str:
+    env = os.environ.get("REPRO_PIPELINE_BACKEND")
+    if env:
+        return env
+    return "pallas" if _on_tpu() else "ref"
+
+
+def get_backend(backend: str | Backend | None = None, **kwargs) -> Backend:
+    """Resolve a backend by name / instance / auto-detection."""
+    if isinstance(backend, Backend):
+        return backend
+    name = backend or default_backend_name()
+    if name == "pallas_interpret":          # kernels/ops.py spelling
+        name, kwargs = "pallas", dict(kwargs, interpret=True)
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,202 @@
+"""`CutiePipeline` — one compile → run → measure → serve surface.
+
+The ASIC's execution model (paper §III, Fig. 3) is: compile the network
+into the layer FIFO once, then let the datapath run the whole program
+autonomously with the host asleep.  `CutiePipeline` is that model for the
+framework: it owns a compiled :class:`CutieProgram`, an execution
+:class:`~repro.pipeline.backends.Backend` (``ref`` | ``pallas`` |
+``packed``), and runs the *whole program* as a single jitted computation —
+a ``lax.scan`` over the stacked layer FIFO when the program is uniform
+(the CUTIE-CNN case: stride-1, padded, constant-channel trunk), an
+unrolled-in-trace loop otherwise.  There is no per-layer host round-trip.
+
+Stats collection is a first-class :class:`~repro.pipeline.tracer.Tracer`
+hook: the tracer's traced half runs inside the same jitted program, so the
+energy model, switching-activity analysis and benchmarks all consume one
+traced execution instead of re-running the network with ad-hoc flags.
+
+    prog = cutie_cnn.to_program(params, cfg)
+    pipe = CutiePipeline(prog, backend="pallas")
+    y = pipe.run(x)                                   # trits out
+    y, rows = pipe.run(x, tracer=SwitchingTracer())   # + traced stats
+    energy = pipe.measure(x)                          # priced inference
+    server = pipe.serve()                             # slot-batched serving
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.pipeline import backends as B
+from repro.pipeline.tracer import SwitchingTracer, Tracer
+
+Array = jax.Array
+
+
+def layer_out_shape(instr: engine.LayerInstr, in_shape) -> tuple:
+    """Static shape inference for one compiled layer (conv + merged pool)."""
+    n, h, w, _ = in_shape
+    oh, ow = engine.conv_out_hw(instr, h, w)
+    if instr.pool is not None:
+        oh, ow = oh // instr.pool[1], ow // instr.pool[1]
+    return (n, oh, ow, instr.weights.shape[-1])
+
+
+def program_shapes(program: engine.CutieProgram, in_shape) -> list[tuple]:
+    """Per-layer activation shapes: [input, after layer 0, ..., output]."""
+    shapes = [tuple(in_shape)]
+    for instr in program.layers:
+        shapes.append(layer_out_shape(instr, shapes[-1]))
+    return shapes
+
+
+def _is_uniform(program: engine.CutieProgram) -> bool:
+    """True when the layer FIFO can be stacked and scanned: identical
+    weight shapes with Cin == Cout, stride 1, padded, no merged pooling."""
+    if not program.layers:
+        return False
+    shape0 = tuple(program.layers[0].weights.shape)
+    for instr in program.layers:
+        if (tuple(instr.weights.shape) != shape0
+                or instr.weights.shape[2] != instr.weights.shape[3]
+                or instr.stride != (1, 1)
+                or not instr.padding
+                or instr.pool is not None):
+            return False
+    return True
+
+
+class CutiePipeline:
+    """A compiled CUTIE program bound to an execution backend."""
+
+    def __init__(self, program: engine.CutieProgram,
+                 backend: str | B.Backend | None = None, *,
+                 scan: bool | None = None):
+        program.validate()
+        self.program = program
+        self.backend = B.get_backend(backend)
+        self._lowered = [self.backend.lower(i) for i in program.layers]
+        uniform = _is_uniform(program)
+        self.scannable = uniform if scan is None else (scan and uniform)
+        self._jit_cache: dict = {}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def compile(cls, layer_specs, *,
+                instance: engine.CutieInstance = engine.GF22_SCM,
+                backend: str | B.Backend | None = None,
+                scan: bool | None = None) -> "CutiePipeline":
+        """Compile float (or pure-trit) layers straight into a pipeline.
+
+        ``layer_specs``: iterable of ``(w_float, bn_dict)`` or
+        ``(w_float, bn_dict, opts)`` tuples, where ``opts`` are keyword
+        arguments of :func:`repro.core.engine.compile_layer`
+        (stride/padding/pool/delta_ratio).
+        """
+        instrs = []
+        for spec in layer_specs:
+            w, bn, *rest = spec
+            instrs.append(engine.compile_layer(w, bn, **(rest[0] if rest
+                                                         else {})))
+        return cls(engine.CutieProgram(instrs, instance), backend=backend,
+                   scan=scan)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.program.layers)
+
+    def shapes(self, in_shape) -> list[tuple]:
+        return program_shapes(self.program, in_shape)
+
+    def __repr__(self) -> str:
+        return (f"CutiePipeline(layers={self.n_layers}, "
+                f"backend={self.backend_name!r}, scan={self.scannable})")
+
+    # -- execution ----------------------------------------------------------
+
+    def _build(self, tracer: Tracer | None):
+        backend, layers = self.backend, self.program.layers
+        if self.scannable:
+            instr0 = layers[0]
+
+            def fn(lowered, x):
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lowered)
+
+                def body(cur, lw):
+                    y = backend.apply(lw, cur, instr0)
+                    rec = tracer.trace_layer(cur, y, instr0) if tracer else {}
+                    return y, rec
+
+                return jax.lax.scan(body, x, stacked)
+        else:
+            def fn(lowered, x):
+                recs, cur = [], x
+                for lw, instr in zip(lowered, layers):
+                    y = backend.apply(lw, cur, instr)
+                    recs.append(tracer.trace_layer(cur, y, instr)
+                                if tracer else {})
+                    cur = y
+                return cur, recs
+
+        return jax.jit(fn)
+
+    def _runner(self, x: Array, tracer: Tracer | None):
+        key = (x.shape, str(x.dtype), tracer.cache_key if tracer else None)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = self._build(tracer)
+        return self._jit_cache[key]
+
+    def run(self, x, tracer: Tracer | None = None):
+        """Execute the whole program on input trits x (N, H, W, C) int8.
+
+        Returns the final trit tensor; with a tracer, also the tracer's
+        finalized per-layer rows: ``(out, rows)``.
+        """
+        x = jnp.asarray(x, jnp.int8)
+        if x.ndim != 4:
+            raise ValueError(f"expected (N, H, W, C) trits, got {x.shape}")
+        out, recs = self._runner(x, tracer)(self._lowered, x)
+        if tracer is None:
+            return out
+        recs = jax.device_get(recs)
+        if self.scannable:                 # dict of (L, ...) -> list of dicts
+            recs = [{k: v[i] for k, v in recs.items()}
+                    for i in range(self.n_layers)]
+        rows = tracer.finalize(self.program, recs, self.shapes(x.shape))
+        return out, rows
+
+    # -- measurement --------------------------------------------------------
+
+    def measure(self, x, params=None) -> dict:
+        """Run + price every layer with the calibrated energy model.
+
+        Same contract as the old ``energy.model.program_energy``: per-layer
+        rows, totals (energy/inference, avg & peak TOp/s/W) and the final
+        trit tensor under ``"final"`` — but through the Tracer path, so the
+        network executes exactly once.
+        """
+        from repro.energy import model as E
+
+        params = params or E.EnergyParams(self.program.instance.technology)
+        out, rows = self.run(x, tracer=SwitchingTracer())
+        res = E.network_energy(rows, params)
+        res["final"] = out
+        return res
+
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, scfg=None, *, head=None, tracer: Tracer | None = None):
+        """Slot-based batch-inference server over this pipeline."""
+        from repro.serving.cutie_server import CutieServer, CutieServerConfig
+
+        return CutieServer(self, scfg or CutieServerConfig(), head=head,
+                           tracer=tracer)

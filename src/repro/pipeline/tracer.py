@@ -1,0 +1,111 @@
+"""First-class stats collection for pipeline execution.
+
+The old API threaded a ``collect_stats: bool`` through the engine and made
+the energy model re-run the network on its own; a :class:`Tracer` replaces
+both.  Its traced half (``trace_layer``) runs *inside* the whole-program
+jitted execution — per-layer statistics are computed on-device as part of
+the same trace, with no second pass and no host round-trips — and its host
+half (``finalize``) turns the fetched records into the consumer's rows.
+
+Because ``trace_layer`` only sees the layer's input/output activations
+(which are bit-identical across backends) plus static metadata, a given
+tracer produces identical results on every backend — the property the
+backend-equivalence tests pin down.
+
+Tracers must use only *static* metadata from the ``instr`` argument
+(shapes, stride, padding, pool); under ``lax.scan`` execution it is the
+template layer, whose threshold/weight arrays are not the scanned slices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine
+
+
+class Tracer:
+    """Base hook: trace_layer runs in-trace, finalize on host.
+
+    ``trace_layer`` must return a dict of scalar/ndarray jax values with a
+    layer-independent structure (so uniform programs can be scanned).
+    ``finalize`` receives one fetched record per layer plus the inferred
+    per-layer input shapes, and returns whatever the consumer wants.
+    """
+
+    def trace_layer(self, x, y, instr: engine.LayerInstr) -> dict:
+        del x, y, instr
+        return {}
+
+    def finalize(self, program: engine.CutieProgram, records: list[dict],
+                 in_shapes: list[tuple]) -> list[dict]:
+        del program, in_shapes
+        return records
+
+    @property
+    def cache_key(self) -> str:
+        """Distinguishes jit caches; tracers with traced-side knobs extend it."""
+        return type(self).__name__
+
+
+class StatsTracer(Tracer):
+    """The engine's legacy per-layer stats as a tracer.
+
+    Rows match ``engine.run_program(..., collect_stats=True)`` exactly:
+    in/out sparsity (traced), weight sparsity, shapes, kernel and the paper
+    op count (host side).
+    """
+
+    def trace_layer(self, x, y, instr):
+        import jax.numpy as jnp
+
+        del instr
+        return {
+            "in_sparsity": jnp.mean((x == 0).astype(jnp.float32)),
+            "out_sparsity": jnp.mean((y == 0).astype(jnp.float32)),
+        }
+
+    def finalize(self, program, records, in_shapes):
+        rows = []
+        for instr, rec, ishape, oshape in zip(
+                program.layers, records, in_shapes, in_shapes[1:]):
+            rows.append({
+                "in_sparsity": float(rec["in_sparsity"]),
+                "weight_sparsity": float(np.mean(
+                    np.asarray(instr.weights) == 0, dtype=np.float32)),
+                "out_sparsity": float(rec["out_sparsity"]),
+                "in_shape": tuple(ishape),
+                "out_shape": tuple(oshape),
+                "kernel": tuple(instr.weights.shape),
+                "ops": engine.layer_ops(instr, ishape),
+            })
+        return rows
+
+
+class SwitchingTracer(Tracer):
+    """Measured unrolled-machine toggle rates, feeding the energy model.
+
+    Traced half: the activation-window toggle probability of the first
+    batch element (`energy.switching.window_toggle` — the paper testbench's
+    annotated switching activity).  Host half: weight density + op counts.
+    Rows feed ``repro.energy.model.network_energy`` directly.
+    """
+
+    def trace_layer(self, x, y, instr):
+        from repro.energy import switching
+
+        del y
+        return switching.window_toggle(
+            x[0], instr.kernel_size, padding=instr.padding)
+
+    def finalize(self, program, records, in_shapes):
+        rows = []
+        for instr, rec, ishape in zip(program.layers, records, in_shapes):
+            rows.append({
+                "ops": engine.layer_ops(instr, ishape),
+                "weight_density": float(
+                    np.mean(np.asarray(instr.weights) != 0)),
+                "act_toggle": float(rec["mult_toggle"]),
+                "window_hamming": float(rec["window_hamming"]),
+            })
+        return rows

@@ -1,1 +1,3 @@
+from repro.serving.cutie_server import (CutieServer,  # noqa: F401
+                                        CutieServerConfig, ImageRequest)
 from repro.serving.server import Server, ServerConfig  # noqa: F401

@@ -30,7 +30,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decoding as DEC
-from repro.models import transformer as TF
 from repro.models.config import ArchConfig
 
 

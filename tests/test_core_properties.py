@@ -3,8 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.extra import numpy as hnp  # noqa: E402
 
 from repro.core import folding, inq, ternary, thermometer
 from repro.kernels import ref

@@ -123,7 +123,8 @@ def test_qat_graph_vs_engine_parity():
                                   train=False)
     prog = cutie_cnn.to_program(params, cfg, engine.CutieInstance(
         n_i=16, n_o=16))
-    feats = engine.run_program(prog, trits.astype(jnp.int8))
+    from repro.pipeline import CutiePipeline
+    feats = CutiePipeline(prog).run(trits.astype(jnp.int8))
     fc_w = np.asarray(cutie_cnn._quant_w(params["fc"], cfg.weight_mode))
     eng_logits = np.asarray(feats).reshape(4, -1).astype(np.float32) @ fc_w
     agree = np.mean(np.argmax(np.asarray(logits), -1)
@@ -132,12 +133,14 @@ def test_qat_graph_vs_engine_parity():
 
 
 def test_run_program_stats():
+    from repro.pipeline import CutiePipeline, StatsTracer
+
     inst = engine.CutieInstance(n_i=8, n_o=8)
     layers = [_rand_layer(jax.random.PRNGKey(i)) for i in range(3)]
     prog = engine.CutieProgram(layers, inst)
     x = jax.random.randint(jax.random.PRNGKey(9), (1, 8, 8, 8), -1, 2
                            ).astype(jnp.int8)
-    out, stats = engine.run_program(prog, x, collect_stats=True)
+    out, stats = CutiePipeline(prog).run(x, tracer=StatsTracer())
     assert len(stats) == 3
     for s in stats:
         assert 0 <= s["weight_sparsity"] <= 1
