@@ -15,11 +15,11 @@ import os
 import time
 import traceback
 
-from benchmarks import (backend_parity, fig6_channels, fig10_switching,
-                        fig11_energy, roofline_report, table2_tiling,
-                        table4_strategies, table5_sota)
+from benchmarks import (backend_parity, compiler_report, fig6_channels,
+                        fig10_switching, fig11_energy, roofline_report,
+                        table2_tiling, table4_strategies, table5_sota)
 
-HEAVY = {"table4", "fig11"}
+HEAVY = {"table4", "fig11", "compiler"}
 
 BENCHES = {
     "table2": table2_tiling,
@@ -30,6 +30,7 @@ BENCHES = {
     "table5": table5_sota,
     "roofline": roofline_report,
     "backends": backend_parity,
+    "compiler": compiler_report,
 }
 
 

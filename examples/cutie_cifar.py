@@ -4,12 +4,17 @@
 
 1. trains the CUTIE CNN (Table III layout) on synthcifar with INQ staged
    quantization (Fig. 8 schedule, Magnitude-Inverse strategy),
-2. compiles the trained float graph into the bit-true CUTIE program and
-   binds it to a `CutiePipeline` (pure-trit weights + folded two-threshold
-   activations, pluggable execution backend),
+2. compiles the trained float graph through `repro.compiler` into the
+   bit-true CUTIE program and binds it to a `CutiePipeline` (pure-trit
+   weights + folded two-threshold activations, pluggable backend) —
+   note the trained width (default 16) is already a *non-conforming*
+   channel count for the 128-wide OCU array; the compiler legalizes it,
 3. checks QAT-graph vs bit-true-pipeline prediction parity,
 4. prices the inference via the pipeline's traced switching activity and
-   the calibrated energy model (TOp/s/W, µJ).
+   the calibrated energy model (TOp/s/W, µJ),
+5. recompiles with the dense classifier head ON the accelerator (dense ->
+   KxK valid conv, generalizing `dense_as_conv`) + the exact sparsity
+   passes, and prints the compiler's per-pass predicted cost table.
 """
 
 import argparse
@@ -72,6 +77,16 @@ def main(argv=None):
         print(f"  {tech}: avg {en['avg_tops_w']:.0f} TOp/s/W, "
               f"peak {en['peak_tops_w']:.0f}, "
               f"{en['energy_uj']:.3f} uJ/inference")
+
+    print("recompiling with the dense head on-accelerator + sparsity "
+          "passes ...")
+    full = Q.compile(res, include_head=True)
+    print(full.cost_table())
+    head_pipe = CutiePipeline(full.program, backend=args.backend)
+    trit_logits = np.asarray(head_pipe.run(x_trits)).reshape(16, -1)
+    print(f"  on-accelerator ternary head: out {trit_logits.shape}, "
+          f"{full.folded_channels} channels const-folded, "
+          f"ops reduction {full.ops_reduction:.1%}")
     print("done")
 
 

@@ -17,7 +17,11 @@ Steps:
      weights decoded next to compute, §III-A),
   3. measure: traced switching activity -> TOp/s/W (§V-C..E),
   4. serve: continuous slot batching over the same pipeline object,
-  5. the underlying primitives (thermometer §III-D, TWN ternarize §II-A,
+  5. compile your own network: a *non-conforming* net (odd channel
+     counts, residual skip, standalone pooling, dense classifier head)
+     legalized + optimized onto the fixed OCU geometry by
+     `repro.compiler`, with a per-pass predicted cost table,
+  6. the underlying primitives (thermometer §III-D, TWN ternarize §II-A,
      threshold folding §III-C) for when you need them raw.
 """
 
@@ -25,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compiler
 from repro.core import folding, ternary, thermometer
 from repro.pipeline import (CutiePipeline, StatsTracer, available_backends,
                             default_backend_name)
@@ -68,7 +73,34 @@ def main():
     print(f"serve: {len(results)} requests in {server.n_batches} batches "
           f"of {server.scfg.n_slots} slots")
 
-    # 5. the primitives underneath ------------------------------------------
+    # 5. compile your own (non-conforming) network ---------------------------
+    # 20 channels (no tile of anything), a residual skip, a standalone
+    # pool, a dense head: none of it natively fits the OCU geometry; the
+    # compiler legalizes every construct into the conv-chain program form.
+    kg = jax.random.split(jax.random.PRNGKey(7), 8)
+
+    def rand_bn(c, kk):
+        return {"gamma": jax.random.normal(kk, (c,)) + 0.5,
+                "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
+                "var": jnp.ones((c,))}
+
+    g = compiler.Graph(in_channels=6, in_hw=(12, 12))
+    g.conv(jax.random.normal(kg[0], (3, 3, 6, 20)), rand_bn(20, kg[4]),
+           pool=("max", 2))
+    skip = g.conv(jax.random.normal(kg[1], (3, 3, 20, 20)),
+                  rand_bn(20, kg[5]))
+    body = g.conv(jax.random.normal(kg[2], (3, 3, 20, 20)),
+                  rand_bn(20, kg[6]))
+    g.add(body, skip)                       # residual join
+    g.pool("max", 2)                        # standalone pooling
+    g.dense(jax.random.normal(kg[3], (3 * 3 * 20, 10)))   # classifier head
+    gpipe = CutiePipeline.compile(g)
+    xg = jax.random.randint(kg[7], (2, 12, 12, 6), -1, 2).astype(jnp.int8)
+    yg = gpipe.run(xg)
+    print(f"compiler: non-conforming graph -> {gpipe} -> out {yg.shape}")
+    print(gpipe.compile_result.cost_table())
+
+    # 6. the primitives underneath ------------------------------------------
     enc = thermometer.ternary_thermometer(jnp.asarray([110, 128, 200]), m=128)
     print(f"thermometer: zeros={float(jnp.mean(enc == 0)):.2f} "
           f"(paper: first layer ~66% zeros)")

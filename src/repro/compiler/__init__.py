@@ -1,0 +1,31 @@
+"""`repro.compiler` — legalizing, optimizing graph compiler for CUTIE.
+
+The one front door from arbitrary layer graphs (conv / dense / pool /
+residual-add over trit activations) to bit-true, backend-portable
+:class:`repro.core.engine.CutieProgram`s:
+
+    g = compiler.Graph(in_channels=6, in_hw=(12, 12))
+    g.conv(w, bn, pool=("max", 2))
+    g.dense(w_head)
+    result = compiler.compile_graph(g)
+    print(result.cost_table())
+
+See `repro.compiler.compile` for the pass pipeline, `graph` for the IR,
+`legalize`/`optimize` for the individual passes, `report` for the static
+cost model.
+"""
+
+from repro.compiler.compile import (CompileResult, CompilerOptions,
+                                    compile_graph, lower_graph)
+from repro.compiler.graph import Graph, GraphError, Node
+from repro.compiler.optimize import (eliminate_dead_channels,
+                                     fold_constant_thresholds,
+                                     pad_program_channels)
+from repro.compiler.report import cost_table, program_cost
+
+__all__ = [
+    "CompileResult", "CompilerOptions", "Graph", "GraphError", "Node",
+    "compile_graph", "lower_graph", "eliminate_dead_channels",
+    "fold_constant_thresholds", "pad_program_channels", "cost_table",
+    "program_cost",
+]

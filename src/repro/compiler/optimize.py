@@ -1,0 +1,183 @@
+"""Sparsity-exploiting optimization passes over compiled CutiePrograms.
+
+Both passes are *exact*: the optimized program's trit outputs are
+bit-identical to the input program's on every input (the property the
+compiler test-suite pins down across all execution backends).
+
+* :func:`fold_constant_thresholds` — interval analysis on the int32
+  accumulator.  Per output channel, |z| <= sum|w| (times the avg-pool
+  window for merged avg pooling, since thresholds were pre-scaled); any
+  channel whose folded compares cannot change outcome over that interval
+  is marked constant (``is_const``/``const`` on the ChannelThresholds —
+  the degenerate-channel mechanism the backends already honor).  An
+  all-zero filter is the zmax = 0 special case.
+* :func:`eliminate_dead_channels` — removes intermediate output channels
+  that are provably inert: constant-0 output (zero contribution through
+  the next conv regardless of padding) or unused downstream (the next
+  layer's input slice is all zeros).  Removal slices the producer's
+  filters + thresholds and the consumer's input slice, then re-runs
+  constant folding — dropping an input slice can zero out downstream
+  filters, so the two passes iterate to a fixpoint.  The final layer's
+  channels are never touched (they are the program output).
+
+In hardware terms: constant folding finds OCUs whose compare tree is
+wired to a constant, and dead-channel elimination is Tridgell-style
+"zero weights become silenced datapath" taken to whole output channels —
+the compiler deletes compute the energy model would otherwise merely
+discount.
+
+:func:`pad_program_channels` is the inverse-direction legalization — it
+*adds* all-zero, constant-0 channels to pad internal edges up to the TCU
+width (emulating the fixed 128-wide OCU array, and making uniform chains
+scannable).  It runs after elimination for the obvious reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, folding
+
+
+def _z_bound(instr: engine.LayerInstr) -> np.ndarray:
+    """Per-output-channel bound on the pre-threshold accumulator |z|."""
+    w = np.asarray(instr.weights, np.int64)
+    zmax = np.abs(w).sum(axis=(0, 1, 2)).astype(np.float64)
+    if instr.pool is not None and instr.pool[0] == "avg":
+        zmax = zmax * (instr.pool[1] ** 2)   # z summed over the window,
+        # thresholds pre-scaled by scale_for_avgpool — same interval ratio.
+    return zmax
+
+
+def _fold_layer(instr: engine.LayerInstr) -> tuple[engine.LayerInstr, int]:
+    th = instr.thresholds
+    t_lo = np.asarray(th.t_lo, np.float64)
+    t_hi = np.asarray(th.t_hi, np.float64)
+    flip = np.asarray(th.flip, bool)
+    is_const = np.asarray(th.is_const, bool)
+    const = np.asarray(th.const, np.int8)
+    zmax = _z_bound(instr)
+
+    # out = pos - neg with pos/neg per the flip-aware compare direction.
+    pos_always = np.where(flip, t_hi > zmax, t_hi < -zmax)
+    pos_never = np.where(flip, t_hi <= -zmax, t_hi >= zmax)
+    neg_always = np.where(flip, t_lo < -zmax, t_lo > zmax)
+    neg_never = np.where(flip, t_lo >= zmax, t_lo <= -zmax)
+    decided = (pos_always | pos_never) & (neg_always | neg_never)
+    new = decided & ~is_const
+    if not new.any():
+        return instr, 0
+    folded = (pos_always.astype(np.int8) - neg_always.astype(np.int8))
+    return instr._replace_thresholds(folding.ChannelThresholds(
+        t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
+        const=jnp.asarray(np.where(is_const, const,
+                                   np.where(new, folded, 0)), jnp.int8),
+        is_const=jnp.asarray(is_const | new),
+    )), int(new.sum())
+
+
+def fold_constant_thresholds(
+        program: engine.CutieProgram) -> tuple[engine.CutieProgram, int]:
+    """Mark provably-constant output channels; returns (program, n_folded).
+    """
+    layers, n = [], 0
+    for instr in program.layers:
+        li, ni = _fold_layer(instr)
+        layers.append(li)
+        n += ni
+    return engine.CutieProgram(layers, program.instance), n
+
+
+def pad_program_channels(program: engine.CutieProgram,
+                         pad_to: int) -> engine.CutieProgram:
+    """Zero-pad every internal edge of the program up to `pad_to` channels
+    — the TCU-width legalization.  Producers gain all-zero filters with
+    constant-0 thresholds (silenced OCUs), consumers gain zero input
+    slices; the program input and final output keep their true widths, so
+    outputs are bit-identical.  Runs after dead-channel elimination (which
+    would otherwise delete exactly these channels again)."""
+    layers = list(program.layers)
+    for i in range(len(layers) - 1):
+        cur = layers[i]
+        cout = cur.weights.shape[-1]
+        if cout > pad_to:
+            raise ValueError(f"layer {i}: weights: Cout {cout} exceeds "
+                             f"pad_to={pad_to}")
+        extra = pad_to - cout
+        if extra == 0:
+            continue
+        th = cur.thresholds
+        zf = jnp.zeros((extra,), jnp.float32)
+        padded = folding.ChannelThresholds(
+            t_lo=jnp.concatenate([th.t_lo, zf]),
+            t_hi=jnp.concatenate([th.t_hi, zf]),
+            flip=jnp.concatenate([th.flip, jnp.zeros((extra,), bool)]),
+            const=jnp.concatenate([th.const, jnp.zeros((extra,), jnp.int8)]),
+            is_const=jnp.concatenate([th.is_const,
+                                      jnp.ones((extra,), bool)]))
+        layers[i] = dataclasses.replace(
+            cur, weights=jnp.pad(cur.weights,
+                                 ((0, 0), (0, 0), (0, 0), (0, extra))),
+            thresholds=padded)
+        nxt = layers[i + 1]
+        layers[i + 1] = dataclasses.replace(
+            nxt, weights=jnp.pad(nxt.weights,
+                                 ((0, 0), (0, 0), (0, extra), (0, 0))))
+    return engine.CutieProgram(layers, program.instance)
+
+
+def _slice_cout(instr: engine.LayerInstr, keep: np.ndarray
+                ) -> engine.LayerInstr:
+    th = instr.thresholds
+    kept = folding.ChannelThresholds(
+        t_lo=th.t_lo[keep], t_hi=th.t_hi[keep], flip=th.flip[keep],
+        const=th.const[keep], is_const=th.is_const[keep])
+    return dataclasses.replace(instr, weights=instr.weights[..., keep],
+                               thresholds=kept)
+
+
+def _slice_cin(instr: engine.LayerInstr, keep: np.ndarray
+               ) -> engine.LayerInstr:
+    return dataclasses.replace(instr, weights=instr.weights[:, :, keep, :])
+
+
+def eliminate_dead_channels(
+        program: engine.CutieProgram
+) -> tuple[engine.CutieProgram, list[int]]:
+    """Remove inert intermediate channels; returns (program, removed/layer).
+
+    Exactness argument: a removed channel either (a) emits constant 0, so
+    the next conv's contribution w*0 vanishes at every spatial position
+    (including zero-padded borders), or (b) feeds only zero weights, so its
+    value is never read.  Both leave every surviving accumulator — and
+    therefore every trit — unchanged.
+    """
+    layers = list(program.layers)
+    removed = [0] * len(layers)
+    for _ in range(len(layers) + 1):
+        changed = False
+        layers = [_fold_layer(li)[0] for li in layers]
+        for i in range(len(layers) - 1):
+            cur, nxt = layers[i], layers[i + 1]
+            th = cur.thresholds
+            zero_out = (np.asarray(th.is_const, bool)
+                        & (np.asarray(th.const, np.int8) == 0))
+            unused = ~np.asarray(nxt.weights, np.int8).any(axis=(0, 1, 3))
+            dead = zero_out | unused
+            if dead.all():
+                # a fully-dead layer still needs >= 1 channel to keep the
+                # conv well-formed; the survivor contributes nothing.
+                dead[0] = False
+            if not dead.any():
+                continue
+            keep = np.flatnonzero(~dead)
+            layers[i] = _slice_cout(cur, keep)
+            layers[i + 1] = _slice_cin(nxt, keep)
+            removed[i] += int(dead.sum())
+            changed = True
+        if not changed:
+            break
+    return engine.CutieProgram(layers, program.instance), removed

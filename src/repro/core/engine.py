@@ -98,22 +98,72 @@ class CutieProgram:
     layers: list
     instance: CutieInstance
 
-    def validate(self) -> None:
+    def validate(self, in_shape=None) -> None:
+        """Check the program fits the instance's fixed geometry.
+
+        Every failure names the offending layer index and field, so
+        multi-layer compile failures (and the `repro.compiler` passes that
+        reuse these messages) point at the exact instruction.  With
+        ``in_shape`` (N, H, W, C), activation shapes are propagated and
+        checked against the feature-map buffers too.
+        """
         inst = self.instance
+
+        def bad(i, field, msg):
+            raise ValueError(f"layer {i}: {field}: {msg}")
+
         if len(self.layers) > inst.n_layers:
             raise ValueError(
                 f"{len(self.layers)} layers exceed layer FIFO depth "
                 f"{inst.n_layers}")
         for i, l in enumerate(self.layers):
-            k, _, cin, cout = l.weights.shape
+            if getattr(l.weights, "ndim", 0) != 4:
+                bad(i, "weights", "expected a (K, K, Cin, Cout) tensor, "
+                    f"got shape {np.shape(l.weights)}")
+            k, k2, cin, cout = l.weights.shape
+            if k != k2:
+                bad(i, "weights", f"kernel must be square, got {k}x{k2}")
             if k > inst.k or k % 2 == 0:
-                raise ValueError(f"layer {i}: kernel {k} unsupported")
+                bad(i, "weights", f"kernel {k} unsupported (odd, <= "
+                    f"{inst.k})")
             if cin > inst.n_i or cout > inst.n_o:
-                raise ValueError(
-                    f"layer {i}: channels ({cin},{cout}) exceed "
+                bad(i, "weights", f"channels ({cin},{cout}) exceed "
                     f"({inst.n_i},{inst.n_o})")
-            if not (1 <= l.stride[0] <= 3 and 1 <= l.stride[1] <= 3):
-                raise ValueError(f"layer {i}: stride {l.stride} unsupported")
+            if len(l.stride) != 2 or not (1 <= l.stride[0] <= 3
+                                          and 1 <= l.stride[1] <= 3):
+                bad(i, "stride", f"{l.stride} unsupported (1..3 each axis)")
+            if l.pool is not None:
+                if (len(l.pool) != 2 or l.pool[0] not in ("max", "avg")
+                        or int(l.pool[1]) < 2):
+                    bad(i, "pool", f"{l.pool!r} unsupported "
+                        "(('max'|'avg', window >= 2))")
+            th = l.thresholds
+            for field in ("t_lo", "t_hi", "flip", "const", "is_const"):
+                shape = np.shape(getattr(th, field))
+                if shape != (cout,):
+                    bad(i, f"thresholds.{field}",
+                        f"shape {shape} != (Cout,) = ({cout},)")
+        if in_shape is not None:
+            _, h, w, c = in_shape
+            for i, l in enumerate(self.layers):
+                k, _, cin, cout = l.weights.shape
+                if cin != c:
+                    bad(i, "weights", f"Cin {cin} != incoming activation "
+                        f"channels {c}")
+                if h > inst.i_h or w > inst.i_w:
+                    bad(i, "in_shape", f"feature map {h}x{w} exceeds "
+                        f"buffer {inst.i_h}x{inst.i_w}")
+                if not l.padding and (h < k or w < k):
+                    bad(i, "padding", f"unpadded kernel {k} does not fit "
+                        f"{h}x{w} feature map")
+                h, w = conv_out_hw(l, h, w)
+                if l.pool is not None:
+                    win = l.pool[1]
+                    if h < win or w < win:
+                        bad(i, "pool", f"window {win} exceeds pooled "
+                            f"feature map {h}x{w}")
+                    h, w = h // win, w // win
+                c = cout
 
 
 def compile_layer(w_float: Array, bn: dict, *, stride=(1, 1), padding=True,
@@ -233,14 +283,21 @@ def layer_ops(instr: LayerInstr, in_shape) -> int:
     return 2 * ow * oh * k * k * cin * cout
 
 
-def conv_out_hw(instr: LayerInstr, h: int, w: int) -> tuple[int, int]:
-    """Output spatial dims of one conv (pre-pooling), matching the padded
-    conv exactly: ceil(H/s) rows for odd K with full zero padding."""
-    k = instr.kernel_size
-    sh, sw = instr.stride
-    if instr.padding:
+def conv_out_dims(k: int, stride, padding: bool, h: int, w: int
+                  ) -> tuple[int, int]:
+    """Output spatial dims of a conv (pre-pooling), matching the padded
+    conv exactly: ceil(H/s) rows for odd K with full zero padding.  The
+    single source of truth shared by the engine, the pipeline's shape
+    inference and the compiler's graph IR."""
+    sh, sw = stride
+    if padding:
         return -(-h // sh), -(-w // sw)
     return (h - k) // sh + 1, (w - k) // sw + 1
+
+
+def conv_out_hw(instr: LayerInstr, h: int, w: int) -> tuple[int, int]:
+    return conv_out_dims(instr.kernel_size, instr.stride, instr.padding,
+                         h, w)
 
 
 def dense_as_conv(w_dense: Array,

@@ -86,12 +86,17 @@ def fold_thresholds(alpha: Array, bias: Array, gamma: Array, beta: Array,
     t_hi_f = jnp.where(flip, t_lo, t_hi)
     const = ((c > act_threshold).astype(jnp.int8)
              - (c < -act_threshold).astype(jnp.int8))
+    # Scalar BN terms leave some per-channel vectors 0-d; broadcast all five
+    # to the common channel shape so consumers (validate, compiler passes,
+    # scan stacking) always see (C,).
+    shape = jnp.broadcast_shapes(t_lo_f.shape, t_hi_f.shape, flip.shape,
+                                 const.shape)
     return ChannelThresholds(
-        t_lo=t_lo_f.astype(jnp.float32),
-        t_hi=t_hi_f.astype(jnp.float32),
-        flip=flip,
-        const=const,
-        is_const=(g == 0),
+        t_lo=jnp.broadcast_to(t_lo_f.astype(jnp.float32), shape),
+        t_hi=jnp.broadcast_to(t_hi_f.astype(jnp.float32), shape),
+        flip=jnp.broadcast_to(flip, shape),
+        const=jnp.broadcast_to(const, shape),
+        is_const=jnp.broadcast_to(g == 0, shape),
     )
 
 

@@ -1,0 +1,59 @@
+"""Version shims for the jax mesh/sharding API surface.
+
+Sibling of `repro.kernels._compat` (the Pallas naming shim).  Newer jax
+exposes ``jax.sharding.AxisType`` and grew an ``axis_types=`` kwarg on
+``jax.make_mesh``; the container pins an older jax where neither exists
+(auto sharding is the only behavior).  Resolve whichever API is present
+at import time so mesh construction works on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+
+
+# Native jax.shard_map supports partial-manual mode properly; the legacy
+# experimental API emulates it via `auto=`, whose XLA lowering on old
+# CPU backends can hit "PartitionId instruction is not supported".
+# Callers that *require* partial-manual semantics gate on this.
+HAS_PARTIAL_MANUAL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """``jax.shard_map`` across API generations.
+
+    ``check_vma`` defaults to True like the native APIs (mapped to
+    ``check_rep`` on legacy jax); callers opt out explicitly.
+
+    Newer jax promotes shard_map to ``jax.shard_map`` with ``axis_names``
+    (partial-manual) and ``check_vma``; older jax has
+    ``jax.experimental.shard_map.shard_map`` with the complementary
+    ``auto=`` axis set and ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, **kwargs)

@@ -3,25 +3,24 @@
 `make_production_mesh` is a FUNCTION so importing this module never touches
 jax device state; the dry-run entry point sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+Mesh construction goes through `repro.launch._compat.make_mesh`, which
+papers over the `jax.sharding.AxisType` / `axis_types=` API generations.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.launch import _compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / small-scale runs)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat.make_mesh(shape, axes)
 
 
 def data_axis_size(mesh) -> int:

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.cutie_cnn import CutieCNNConfig
-from repro.core import engine, folding, inq
+from repro.core import engine, inq
 from repro.core import ternary as T
 
 Array = jax.Array
@@ -133,21 +133,49 @@ def apply_bn_updates(params, bn_updates):
     return dict(params, layers=layers)
 
 
-def to_program(params, cfg: CutieCNNConfig,
-               instance: engine.CutieInstance = engine.GF22_SCM,
-               inq_state=None) -> engine.CutieProgram:
-    """Compile trained QAT params into the bit-true CUTIE program."""
+def to_graph(params, cfg: CutieCNNConfig, inq_state=None,
+             include_head: bool = False):
+    """Emit the trained QAT net as a `repro.compiler` layer graph.
+
+    With ``include_head=True`` the float FC classifier rides along as a
+    dense node, which the compiler legalizes onto the OCU weight buffer
+    (ternarized logits — the fully-on-accelerator deployment).
+    """
+    from repro import compiler
+
     if inq_state is not None:
         params = dict(params,
                       layers=inq.apply(inq_state["layers"],
                                        params["layers"]))
-    instrs = []
+    g = compiler.Graph(in_channels=cfg.in_channels,
+                       in_hw=(cfg.img_hw, cfg.img_hw))
     for (op, mult, pool), lp in zip(cfg.layout, params["layers"]):
         w = lp["w"]
         if inq_state is None:
             w = jnp.asarray(_quant_w(w, cfg.weight_mode))
-        instrs.append(engine.compile_layer(
-            w, dict(gamma=lp["gamma"], beta=lp["beta"], mean=lp["mean"],
-                    var=lp["var"]),
-            pool=pool))
-    return engine.CutieProgram(instrs, instance)
+        g.conv(w, dict(gamma=lp["gamma"], beta=lp["beta"], mean=lp["mean"],
+                       var=lp["var"]), pool=pool)
+    if include_head:
+        w_fc = params["fc"]
+        if inq_state is None:
+            w_fc = jnp.asarray(_quant_w(w_fc, cfg.weight_mode))
+        g.dense(w_fc)
+    return g
+
+
+def to_program(params, cfg: CutieCNNConfig,
+               instance: engine.CutieInstance = engine.GF22_SCM,
+               inq_state=None, optimize: bool = False
+               ) -> engine.CutieProgram:
+    """Compile trained QAT params into the bit-true CUTIE program.
+
+    Routed through `repro.compiler` (graph emission + legalization);
+    ``optimize=True`` additionally runs the exact sparsity passes
+    (threshold constant folding + dead-channel elimination), which
+    preserve outputs bit-exactly but may shrink per-layer channel counts.
+    """
+    from repro import compiler
+
+    g = to_graph(params, cfg, inq_state=inq_state)
+    return compiler.compile_graph(g, instance=instance,
+                                  optimize=optimize).program

@@ -81,23 +81,42 @@ class CutiePipeline:
         uniform = _is_uniform(program)
         self.scannable = uniform if scan is None else (scan and uniform)
         self._jit_cache: dict = {}
+        self.compile_result = None     # set by compile() on the graph path
 
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def compile(cls, layer_specs, *,
+    def compile(cls, source, *,
                 instance: engine.CutieInstance = engine.GF22_SCM,
                 backend: str | B.Backend | None = None,
-                scan: bool | None = None) -> "CutiePipeline":
-        """Compile float (or pure-trit) layers straight into a pipeline.
+                scan: bool | None = None, **compiler_options
+                ) -> "CutiePipeline":
+        """Compile a network straight into a pipeline.
 
-        ``layer_specs``: iterable of ``(w_float, bn_dict)`` or
-        ``(w_float, bn_dict, opts)`` tuples, where ``opts`` are keyword
-        arguments of :func:`repro.core.engine.compile_layer`
-        (stride/padding/pool/delta_ratio).
+        ``source`` is either a :class:`repro.compiler.Graph` — the general
+        front door: arbitrary conv/dense/pool/residual graphs are
+        legalized, optimized and lowered by `repro.compiler`, with the
+        per-pass cost report kept on ``pipeline.compile_result`` — or the
+        legacy iterable of ``(w_float, bn_dict[, opts])`` tuples where
+        ``opts`` are keyword arguments of
+        :func:`repro.core.engine.compile_layer`
+        (stride/padding/pool/delta_ratio).  ``compiler_options`` (e.g.
+        ``optimize=False``, ``pad_to=128``) apply to the graph path only.
         """
+        from repro import compiler
+
+        if isinstance(source, compiler.Graph):
+            result = compiler.compile_graph(source, instance=instance,
+                                            **compiler_options)
+            pipe = cls(result.program, backend=backend, scan=scan)
+            pipe.compile_result = result
+            return pipe
+        if compiler_options:
+            raise TypeError("compiler options "
+                            f"{sorted(compiler_options)} require a "
+                            "repro.compiler.Graph source")
         instrs = []
-        for spec in layer_specs:
+        for spec in source:
             w, bn, *rest = spec
             instrs.append(engine.compile_layer(w, bn, **(rest[0] if rest
                                                          else {})))

@@ -12,7 +12,6 @@ The container trains a width-reduced net on the synthetic dataset
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -134,13 +133,44 @@ def evaluate(params, inq_state, cfg, rc: QATRunConfig,
     return correct / tot
 
 
-def to_program(result: dict, instance=None):
+def _fit_instance(result: dict, instance, include_head: bool = False):
     from repro.core import engine
     instance = instance or engine.GF22_SCM
-    cfg, rc = result["cfg"], result["run_config"]
+    cfg = result["cfg"]
     # width-reduced nets still compile; the instance check needs n_i >= width
-    inst = dataclasses.replace(
+    return dataclasses.replace(
         instance, n_i=max(instance.n_i, cfg.in_channels),
-        n_o=max(instance.n_o, cfg.width))
-    return cutie_cnn.to_program(
-        result["params"], cfg, inst, inq_state=result["inq_state"])
+        n_o=max(instance.n_o, cfg.width),
+        n_layers=max(instance.n_layers,
+                     len(cfg.layout) + (1 if include_head else 0)))
+
+
+def to_graph(result: dict, include_head: bool = False):
+    """Emit the trained run as a `repro.compiler` layer graph."""
+    return cutie_cnn.to_graph(result["params"], result["cfg"],
+                              inq_state=result["inq_state"],
+                              include_head=include_head)
+
+
+def compile(result: dict, instance=None, *, include_head: bool = False,
+            optimize: bool = True, **options):
+    """Compile a trained run through `repro.compiler` (the one front door:
+    graph emission -> legalization -> exact sparsity passes).
+
+    Returns the full :class:`repro.compiler.CompileResult` (program +
+    per-pass cost reports); ``include_head=True`` puts the dense
+    classifier on-accelerator and sizes the instance's layer FIFO for it.
+    ``options`` are extra :class:`repro.compiler.CompilerOptions` fields
+    (e.g. ``pad_to=128``).
+    """
+    from repro import compiler as _compiler
+
+    inst = _fit_instance(result, instance, include_head=include_head)
+    return _compiler.compile_graph(
+        to_graph(result, include_head=include_head), instance=inst,
+        optimize=optimize, **options)
+
+
+def to_program(result: dict, instance=None, optimize: bool = False):
+    """Program-only shorthand over :func:`compile` (trunk, no head)."""
+    return compile(result, instance, optimize=optimize).program

@@ -1,0 +1,347 @@
+"""`repro.compiler`: legalization edge cases, exact optimization passes,
+backend-portable bit-identity, and layer-indexed diagnostics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.configs.cutie_cnn import CutieCNNConfig
+from repro.core import engine, folding
+from repro.models import cutie_cnn
+from repro.pipeline import CutiePipeline, available_backends
+
+BACKENDS = sorted(available_backends())
+
+
+def _bn(c, key, spread=0.5):
+    return {"gamma": jax.random.normal(key, (c,)) + spread,
+            "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
+            "var": jnp.ones((c,))}
+
+
+def _trits(key, shape):
+    return jax.random.randint(key, shape, -1, 2).astype(jnp.int8)
+
+
+def _nonconforming_graph(seed=0):
+    """Channels not a multiple of anything, residual, pool, dense head."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    g = compiler.Graph(in_channels=6, in_hw=(12, 12))
+    g.conv(jax.random.normal(ks[0], (3, 3, 6, 20)), _bn(20, ks[4]),
+           pool=("max", 2))
+    s = g.conv(jax.random.normal(ks[1], (3, 3, 20, 20)), _bn(20, ks[5]))
+    h = g.conv(jax.random.normal(ks[2], (3, 3, 20, 20)), _bn(20, ks[6]))
+    g.add(h, s)
+    g.pool("max", 2)
+    g.dense(jax.random.normal(ks[3], (3 * 3 * 20, 10)))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: compiler path == hand-compiled path, all backends
+# ---------------------------------------------------------------------------
+
+
+def test_paper_cnn_compiler_vs_hand_compiled_bit_identical():
+    cfg = CutieCNNConfig(width=8, thermometer_m=4)
+    params = cutie_cnn.init_params(cfg, jax.random.PRNGKey(0))
+    inst = engine.CutieInstance(n_i=16, n_o=16)
+
+    instrs = []        # the pre-compiler hand-written path, as an oracle
+    for (op, mult, pool), lp in zip(cfg.layout, params["layers"]):
+        w = jnp.asarray(cutie_cnn._quant_w(lp["w"], cfg.weight_mode))
+        instrs.append(engine.compile_layer(
+            w, dict(gamma=lp["gamma"], beta=lp["beta"], mean=lp["mean"],
+                    var=lp["var"]), pool=pool))
+    hand = engine.CutieProgram(instrs, inst)
+    comp = cutie_cnn.to_program(params, cfg, inst)
+
+    x = _trits(jax.random.PRNGKey(1), (2, 32, 32, 12))
+    for be in BACKENDS:
+        a = np.asarray(CutiePipeline(hand, backend=be).run(x))
+        b = np.asarray(CutiePipeline(comp, backend=be).run(x))
+        assert np.array_equal(a, b), be
+
+
+def test_nonconforming_net_end_to_end_all_backends():
+    g = _nonconforming_graph()
+    x = _trits(jax.random.PRNGKey(9), (2, 12, 12, 6))
+    outs = {}
+    for be in BACKENDS:
+        pipe = CutiePipeline.compile(g, backend=be)
+        pipe.program.validate(in_shape=(2, 12, 12, 6))
+        outs[be] = np.asarray(pipe.run(x))
+    assert outs["ref"].shape == (2, 1, 1, 10)
+    for be, o in outs.items():
+        assert np.array_equal(o, outs["ref"]), be
+
+
+# ---------------------------------------------------------------------------
+# legalization edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_channel_count_not_multiple_of_tcu_width():
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    g = compiler.Graph(in_channels=5, in_hw=(8, 8))
+    g.conv(jax.random.normal(ks[0], (3, 3, 5, 13)), _bn(13, ks[2]))
+    g.conv(jax.random.normal(ks[1], (3, 3, 13, 7)), _bn(7, ks[3]))
+    res = compiler.compile_graph(g, optimize=False)
+    x = _trits(ks[1], (1, 8, 8, 5))
+    base = np.asarray(CutiePipeline(res.program).run(x))
+
+    padded = compiler.compile_graph(g, optimize=False, pad_to=16)
+    assert [li.weights.shape[-1] for li in padded.program.layers] == [16, 7]
+    assert np.array_equal(
+        np.asarray(CutiePipeline(padded.program).run(x)), base)
+    with pytest.raises(ValueError, match="pad_to"):
+        compiler.compile_graph(g, pad_to=8)
+
+
+def test_dense_lowering_matches_dense_as_conv_oracle():
+    # fm exactly (3, 3, n_i): our reshape == engine.dense_as_conv mapping
+    inst = engine.CutieInstance(n_i=8, n_o=16, i_w=8, i_h=8)
+    w = jnp.asarray(np.random.default_rng(0).integers(
+        -1, 2, size=(3 * 3 * 8, 16)), jnp.float32)
+    g = compiler.Graph(in_channels=8, in_hw=(3, 3))
+    g.dense(w)
+    res = compiler.compile_graph(g, instance=inst, optimize=False)
+    assert np.array_equal(np.asarray(res.program.layers[0].weights),
+                          np.asarray(engine.dense_as_conv(w, inst),
+                                     np.int8))
+    # and the program output equals thresholds(flatten(x) @ w)
+    x = _trits(jax.random.PRNGKey(3), (4, 3, 3, 8))
+    out = np.asarray(CutiePipeline(res.program).run(x))
+    z = np.asarray(x, np.int32).reshape(4, -1) @ np.asarray(w, np.int32)
+    want = np.asarray(folding.apply_thresholds(
+        jnp.asarray(z), res.program.layers[0].thresholds))
+    assert np.array_equal(out.reshape(4, -1), want)
+
+
+def test_dense_lowering_1x1_map():
+    g = compiler.Graph(in_channels=12, in_hw=(1, 1))
+    w = jax.random.normal(jax.random.PRNGKey(4), (12, 5))
+    g.dense(w)
+    res = compiler.compile_graph(g, optimize=False)
+    assert res.program.layers[0].weights.shape == (1, 1, 12, 5)
+    x = _trits(jax.random.PRNGKey(5), (3, 1, 1, 12))
+    assert CutiePipeline(res.program).run(x).shape == (3, 1, 1, 5)
+
+
+def test_dense_on_unmappable_map_is_rejected_with_node_name():
+    g = compiler.Graph(in_channels=4, in_hw=(4, 4))       # 4x4: even, > 1
+    g.dense(jax.random.normal(jax.random.PRNGKey(6), (4 * 4 * 4, 3)),
+            name="head")
+    with pytest.raises(compiler.GraphError, match="head.*not mappable"):
+        compiler.compile_graph(g)
+
+
+def test_max_pool_fusion_equals_merged_pool():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    w, bn = jax.random.normal(ks[0], (3, 3, 8, 8)), _bn(8, ks[1])
+    x = _trits(ks[2], (2, 8, 8, 8))
+    g1 = compiler.Graph(in_channels=8, in_hw=(8, 8))
+    g1.conv(w, bn, pool=("max", 2))
+    g2 = compiler.Graph(in_channels=8, in_hw=(8, 8))
+    g2.conv(w, bn)
+    g2.pool("max", 2)
+    a = CutiePipeline.compile(g1, optimize=False)
+    b = CutiePipeline.compile(g2, optimize=False)
+    assert b.n_layers == 1              # fused, no identity conv needed
+    assert np.array_equal(np.asarray(a.run(x)), np.asarray(b.run(x)))
+
+
+def test_avg_pool_node_keeps_trit_semantics():
+    """Standalone avg pool = ternarize(mean of trits): must NOT fuse into
+    the producer (pre-threshold pooling computes something different)."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    w, bn = jax.random.normal(ks[0], (3, 3, 8, 8)), _bn(8, ks[1])
+    x = _trits(ks[2], (2, 8, 8, 8))
+    g = compiler.Graph(in_channels=8, in_hw=(8, 8))
+    g.conv(w, bn)
+    g.pool("avg", 2)
+    pipe = CutiePipeline.compile(g, optimize=False)
+    assert pipe.n_layers == 2           # identity-conv insertion, no fuse
+    trits, _ = engine.run_layer(x, engine.compile_layer(w, bn))
+    s = np.asarray(trits, np.int32).reshape(2, 4, 2, 4, 2, 8).sum((2, 4))
+    want = (s > 2).astype(np.int8) - (s < -2).astype(np.int8)
+    assert np.array_equal(np.asarray(pipe.run(x)), want)
+
+
+@pytest.mark.parametrize("kind", ["max", "avg"])
+def test_pool_after_input_inserts_identity_conv(kind):
+    g = compiler.Graph(in_channels=6, in_hw=(8, 8))
+    g.pool(kind, 2)
+    res = compiler.compile_graph(g, optimize=False)
+    assert len(res.program.layers) == 1
+    x = _trits(jax.random.PRNGKey(8), (2, 8, 8, 6))
+    out = np.asarray(CutiePipeline(res.program).run(x))
+    xr = np.asarray(x).reshape(2, 4, 2, 4, 2, 6)
+    if kind == "max":
+        want = xr.max(axis=(2, 4))
+    else:   # ternarize(mean of trits, 0.5) on integer sums
+        s = xr.astype(np.int32).sum(axis=(2, 4))
+        want = (s > 2).astype(np.int8) - (s < -2).astype(np.int8)
+    assert np.array_equal(out, want)
+
+
+def test_residual_lowering_matches_manual_add():
+    ks = jax.random.split(jax.random.PRNGKey(10), 6)
+    c = 9
+    w1, w2 = _trits(ks[0], (3, 3, c, c)), _trits(ks[1], (3, 3, c, c))
+    bn1, bn2, bna = _bn(c, ks[2]), _bn(c, ks[3]), _bn(c, ks[4])
+    g = compiler.Graph(in_channels=c, in_hw=(8, 8))
+    s = g.conv(w1, bn1)
+    h = g.conv(w2, bn2)
+    g.add(h, s, bn=bna)
+    res = compiler.compile_graph(g, optimize=False)
+    x = _trits(ks[5], (2, 8, 8, c))
+    out = np.asarray(CutiePipeline(res.program).run(x))
+
+    a, _ = engine.run_layer(x, engine.compile_layer(w1, bn1))
+    b, _ = engine.run_layer(a, engine.compile_layer(w2, bn2))
+    th = engine.compile_layer(
+        jnp.ones((1, 1, 1, c), jnp.float32).at[0, 0, 0].set(1), bna
+    ).thresholds       # identity trit conv just to fold bna's thresholds
+    want = np.asarray(folding.apply_thresholds(
+        (a.astype(jnp.int32) + b.astype(jnp.int32)), th))
+    assert np.array_equal(out, want)
+
+
+def test_residual_rejects_strided_body():
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    g = compiler.Graph(in_channels=4, in_hw=(8, 8))
+    s = g.conv(_trits(ks[0], (3, 3, 4, 4)), _bn(4, ks[2]))
+    h = g.conv(_trits(ks[1], (3, 3, 4, 4)), _bn(4, ks[2]), stride=(2, 2))
+    g.add(h, s)
+    with pytest.raises(compiler.GraphError):
+        compiler.compile_graph(g)
+
+
+# ---------------------------------------------------------------------------
+# optimization passes
+# ---------------------------------------------------------------------------
+
+
+def _graph_with_dead_channels(seed=12):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    g = compiler.Graph(in_channels=6, in_hw=(8, 8))
+    w0 = np.array(jax.random.normal(ks[0], (3, 3, 6, 16)))
+    w0[..., 3] = 0.0                      # all-zero filter
+    w0[..., 7] = 0.0                      # all-zero filter
+    bn0 = {k: np.array(v) for k, v in _bn(16, ks[3]).items()}
+    bn0["beta"][5] = 500.0                # provably-constant +1 channel
+    g.conv(jnp.asarray(w0), bn0)
+    g.conv(jax.random.normal(ks[1], (3, 3, 16, 12)), _bn(12, ks[4]),
+           pool=("avg", 2))
+    g.conv(jax.random.normal(ks[2], (3, 3, 12, 8)), _bn(8, ks[5]))
+    return g
+
+
+def test_dead_channel_elimination_bit_exact_all_backends():
+    g = _graph_with_dead_channels()
+    raw = compiler.compile_graph(g, optimize=False)
+    opt = compiler.compile_graph(g)
+    assert opt.folded_channels >= 1               # beta=500 channel
+    assert sum(opt.removed_channels) >= 2         # the all-zero filters
+    assert opt.ops_reduction > 0
+    assert (opt.program.layers[0].weights.shape[-1]
+            < raw.program.layers[0].weights.shape[-1])
+    x = _trits(jax.random.PRNGKey(13), (3, 8, 8, 6))
+    for be in BACKENDS:
+        a = np.asarray(CutiePipeline(raw.program, backend=be).run(x))
+        b = np.asarray(CutiePipeline(opt.program, backend=be).run(x))
+        assert np.array_equal(a, b), be
+
+
+def test_threshold_fold_marks_out_of_range_channels():
+    ks = jax.random.split(jax.random.PRNGKey(14), 2)
+    w = _trits(ks[0], (3, 3, 4, 4))
+    bn = {k: np.array(v) for k, v in _bn(4, ks[1]).items()}
+    bn["gamma"] = np.abs(bn["gamma"]) + 0.1       # keep compare direction
+    bn["beta"][2] = 300.0                         # out of reach: const +1
+    instr = engine.compile_layer(jnp.asarray(w), bn)
+    prog = engine.CutieProgram([instr], engine.CutieInstance(n_i=4, n_o=4))
+    folded, n = compiler.fold_constant_thresholds(prog)
+    assert n == 1
+    th = folded.layers[0].thresholds
+    assert bool(np.asarray(th.is_const)[2]) and \
+        int(np.asarray(th.const)[2]) == 1
+    x = _trits(ks[0], (2, 6, 6, 4))
+    a = np.asarray(CutiePipeline(prog).run(x))
+    b = np.asarray(CutiePipeline(folded).run(x))
+    assert np.array_equal(a, b)
+
+
+def test_unused_downstream_channels_are_removed():
+    ks = jax.random.split(jax.random.PRNGKey(15), 4)
+    g = compiler.Graph(in_channels=4, in_hw=(6, 6))
+    g.conv(_trits(ks[0], (3, 3, 4, 8)), _bn(8, ks[2]))
+    w1 = np.array(_trits(ks[1], (3, 3, 8, 6)))
+    w1[:, :, 5, :] = 0                    # nobody reads channel 5
+    g.conv(jnp.asarray(w1), _bn(6, ks[3]))
+    opt = compiler.compile_graph(g)
+    assert opt.program.layers[0].weights.shape[-1] == 7
+    x = _trits(ks[2], (2, 6, 6, 4))
+    raw = compiler.compile_graph(g, optimize=False)
+    assert np.array_equal(
+        np.asarray(CutiePipeline(raw.program).run(x)),
+        np.asarray(CutiePipeline(opt.program).run(x)))
+
+
+# ---------------------------------------------------------------------------
+# diagnostics + reports
+# ---------------------------------------------------------------------------
+
+
+def test_validate_names_layer_and_field():
+    inst = engine.CutieInstance(n_i=8, n_o=8)
+    ks = jax.random.split(jax.random.PRNGKey(16), 2)
+    good = engine.compile_layer(
+        jax.random.normal(ks[0], (3, 3, 8, 8)), _bn(8, ks[1]))
+    bad_stride = dataclasses.replace(good, stride=(7, 1))
+    with pytest.raises(ValueError, match=r"layer 1: stride"):
+        engine.CutieProgram([good, bad_stride], inst).validate()
+    th = good.thresholds
+    bad_th = good._replace_thresholds(dataclasses.replace(
+        th, t_lo=th.t_lo[:3]))
+    with pytest.raises(ValueError, match=r"layer 0: thresholds.t_lo"):
+        engine.CutieProgram([bad_th], inst).validate()
+    narrow = engine.compile_layer(
+        jax.random.normal(ks[0], (3, 3, 4, 8)), _bn(8, ks[1]))
+    with pytest.raises(ValueError, match=r"layer 1: weights: Cin"):
+        engine.CutieProgram([good, narrow], inst).validate(
+            in_shape=(1, 8, 8, 8))
+    with pytest.raises(ValueError, match=r"layer 0: pool"):
+        engine.CutieProgram(
+            [dataclasses.replace(good, pool=("median", 2))], inst
+        ).validate()
+
+
+def test_graph_errors_name_nodes():
+    g = compiler.Graph(in_channels=4, in_hw=(8, 8))
+    g.conv(jnp.zeros((3, 3, 5, 4)), name="convX")       # Cin mismatch
+    with pytest.raises(compiler.GraphError, match="convX.*Cin 5"):
+        compiler.compile_graph(g)
+    g2 = compiler.Graph(in_channels=4, in_hw=(8, 8))
+    g2.conv(jnp.zeros((2, 2, 4, 4)))                    # even kernel
+    with pytest.raises(ValueError, match=r"layer 0: weights: kernel 2"):
+        compiler.compile_graph(g2)
+
+
+def test_cost_report_tracks_passes():
+    res = compiler.compile_graph(_graph_with_dead_channels(), pad_to=16)
+    names = [r["pass"] for r in res.reports]
+    assert names == ["lowered", "fold-thresholds", "dead-channel-elim",
+                     "pad-channels"]
+    costs = {r["pass"]: r["cost"] for r in res.reports}
+    assert costs["dead-channel-elim"]["ops"] < costs["lowered"]["ops"]
+    assert costs["pad-channels"]["ops"] > costs["dead-channel-elim"]["ops"]
+    table = res.cost_table()
+    assert "dead-channel-elim" in table and "TOp/s/W" in table
+    for c in costs.values():
+        assert c["total_uj"] > 0 and c["dram_mbit"] > 0
