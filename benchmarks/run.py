@@ -17,7 +17,8 @@ import traceback
 
 from benchmarks import (backend_parity, compiler_report, fig6_channels,
                         fig10_switching, fig11_energy, roofline_report,
-                        table2_tiling, table4_strategies, table5_sota)
+                        serving_load, table2_tiling, table4_strategies,
+                        table5_sota)
 
 HEAVY = {"table4", "fig11", "compiler"}
 
@@ -31,6 +32,7 @@ BENCHES = {
     "roofline": roofline_report,
     "backends": backend_parity,
     "compiler": compiler_report,
+    "serving": serving_load,
 }
 
 

@@ -7,7 +7,7 @@ compile a network into a bit-true CUTIE program (the layer FIFO), run it
 as a single jitted whole-program execution on a pluggable backend
 (``ref`` | ``pallas`` | ``packed``), measure it with a first-class Tracer
 hook feeding the calibrated energy model, and serve it through the
-slot-batched server.
+scheduler-driven `CutieEngine`.
 
 Steps:
   1. compile: ternary conv+BN layers -> pure-trit weights + folded
@@ -16,7 +16,8 @@ Steps:
      (`lax.conv` oracle / Pallas OCU-array kernel / packed 5-trits-per-byte
      weights decoded next to compute, §III-A),
   3. measure: traced switching activity -> TOp/s/W (§V-C..E),
-  4. serve: continuous slot batching over the same pipeline object,
+  4. serve: deadline-scheduled, batch-bucketed continuous batching over
+     the same pipeline object (`pipe.engine()`),
   5. compile your own network: a *non-conforming* net (odd channel
      counts, residual skip, standalone pooling, dense classifier head)
      legalized + optimized onto the fixed OCU geometry by
@@ -65,13 +66,16 @@ def main():
     print(f"measure: {en['avg_tops_w']:.0f} TOp/s/W avg, "
           f"{en['energy_uj']:.3f} uJ/inference (GF22 SCM; paper avg 392)")
 
-    # 4. serve — slot-batched continuous batching ----------------------------
-    server = pipe.serve()
-    uids = [server.submit(np.asarray(x[i % 2])) for i in range(6)]
-    results = server.run()
-    assert np.array_equal(results[uids[0]], outs["ref"][0])
-    print(f"serve: {len(results)} requests in {server.n_batches} batches "
-          f"of {server.scfg.n_slots} slots")
+    # 4. serve — scheduler-driven engine over the same pipeline --------------
+    eng = pipe.engine("deadline", buckets=(1, 2, 4))
+    handles = [eng.submit(np.asarray(x[i % 2]),
+                          deadline=0.05 if i == 0 else 5.0) for i in range(6)]
+    results = {h.uid: h.request.result for h in eng.stream()}
+    assert np.array_equal(results[handles[0].uid], outs["ref"][0])
+    stats = eng.stats()
+    print(f"serve: {len(results)} requests in {stats['n_batches']} bucketed "
+          f"batches (scheduler={stats['scheduler']}, "
+          f"p99 {1e3 * stats['latency']['p99']:.1f} ms)")
 
     # 5. compile your own (non-conforming) network ---------------------------
     # 20 channels (no tile of anything), a residual skip, a standalone

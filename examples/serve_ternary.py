@@ -1,16 +1,20 @@
 """End-to-end serving driver (the paper is an inference engine, so the
-e2e example is serving): continuous batching over a ternary-weight model.
+e2e example is serving): one scheduler-driven `CutieEngine` front-end.
 
     PYTHONPATH=src python examples/serve_ternary.py [--requests 12]
     PYTHONPATH=src python examples/serve_ternary.py --cutie [--backend ref]
 
-Two serving paths share the slot-batched loop:
+Two workloads share the engine's submit -> schedule -> execute -> stream
+lifecycle:
   * LLM (default): the (reduced) llama backbone in bf16 vs ternary_packed
     weight modes (packed trits, 5/byte, decoded next to the matmul),
+    served by a slot-resident `LLMExecutor`;
   * --cutie: a compiled CUTIE CNN program served through
-    ``CutiePipeline(...).serve()`` — image requests, whole-program jitted
-    execution per slot batch, any of the ref/pallas/packed backends.
-Prints throughput and the weight-bytes comparison.
+    ``CutiePipeline.engine()`` — image requests, whole-program jitted
+    execution per bucketed batch, any of the ref/pallas/packed backends,
+    with a tight-deadline "interactive" class the deadline scheduler
+    serves first.
+Prints throughput, latency percentiles and the weight-bytes comparison.
 """
 
 import argparse
@@ -23,12 +27,12 @@ import numpy as np
 import repro.configs as configs
 from repro.models import transformer as TF
 from repro.models.config import reduce_for_smoke
-from repro.serving import Server, ServerConfig
+from repro.serving import CutieEngine, LLMExecutor, ServerConfig
 
 
 def serve_cutie(args) -> None:
-    """Slot-batched image serving over one CutiePipeline object."""
-    from repro.core import codec, engine
+    """Engine-served images over one CutiePipeline object."""
+    from repro.core import codec, engine as core_engine
     from repro.pipeline import CutiePipeline
 
     c, hw, depth = 16, 16, 5
@@ -39,25 +43,35 @@ def serve_cutie(args) -> None:
               "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
         specs.append((jax.random.normal(k, (3, 3, c, c)), bn))
     pipe = CutiePipeline.compile(
-        specs, instance=engine.CutieInstance(n_i=c, n_o=c),
+        specs, instance=core_engine.CutieInstance(n_i=c, n_o=c),
         backend=args.backend)
-    server = pipe.serve()
+    eng = pipe.engine(args.scheduler, buckets=(1, 2, args.slots))
 
     rng = np.random.default_rng(0)
     imgs = [rng.integers(-1, 2, size=(hw, hw, c)).astype(np.int8)
             for _ in range(args.requests)]
     t0 = time.perf_counter()
-    for im in imgs:
-        server.submit(im)
-    outs = server.run()
+    for i, im in enumerate(imgs):
+        interactive = i % 4 == 0
+        eng.submit(im, deadline=0.1 if interactive else 10.0,
+                   priority=int(interactive),
+                   tag="interactive" if interactive else "batch")
+    outs = {h.uid: h.request.result for h in eng.stream()}
     dt = time.perf_counter() - t0
 
+    stats = eng.stats()
     dense = sum(i.weights.size for i in pipe.program.layers)
     packed = sum(codec.packed_size(i.weights.size)
                  for i in pipe.program.layers)
+    lat = stats["latency"]
     print(f"[cutie/{pipe.backend_name}] {len(outs)} images in "
-          f"{server.n_batches} slot batches, {len(outs) / dt:.1f} imgs/s "
-          f"(scan={pipe.scannable})")
+          f"{stats['n_batches']} bucketed batches, {len(outs) / dt:.1f} "
+          f"imgs/s (scheduler={stats['scheduler']}, scan={pipe.scannable}, "
+          f"{stats['jit_variants']['default']} jit variants)")
+    print(f"latency p50/p95/p99: {1e3 * lat['p50']:.1f}/"
+          f"{1e3 * lat['p95']:.1f}/{1e3 * lat['p99']:.1f} ms; per tag: "
+          + "; ".join(f"{t}: p99={1e3 * s['p99']:.1f} ms"
+                      for t, s in stats["by_tag"].items()))
     print(f"weights: {dense} trits -> {packed} packed bytes "
           f"({8 * packed / dense:.1f} bits/trit vs 8 dense)")
 
@@ -72,6 +86,8 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--scheduler", default="deadline",
+                    choices=("fcfs", "priority", "deadline"))
     ap.add_argument("--cutie", action="store_true",
                     help="serve a compiled CUTIE CNN program instead")
     ap.add_argument("--backend", default=None,
@@ -90,22 +106,24 @@ def main(argv=None):
     for quant in ("none", "ternary_packed"):
         cfg = base.replace(quant=quant)
         params = TF.init_params(cfg, jax.random.PRNGKey(0))
-        server = Server(params, cfg, ServerConfig(
-            n_slots=args.slots, max_new_tokens=args.max_new))
+        engine = CutieEngine(args.scheduler)
+        engine.register("llm", LLMExecutor(params, cfg, ServerConfig(
+            n_slots=args.slots, max_new_tokens=args.max_new)))
         for p in prompts:
-            server.submit(p)
+            engine.submit(p, model="llm")
         t0 = time.perf_counter()
-        outs = server.run()
+        outs = engine.run()
         dt = time.perf_counter() - t0
         ntok = sum(len(v) for v in outs.values())
         proj = {k: v for k, v in _flat(params) if "embed" not in k
                 and "head" not in k}
+        lat = engine.stats()["latency"]
         stats[quant] = {"tok_s": ntok / dt, "dt": dt,
                         "proj_bytes": sum(
                             x.size * x.dtype.itemsize
                             for x in proj.values())}
         print(f"[{quant}] {len(outs)} requests, {ntok} tokens, "
-              f"{ntok / dt:.1f} tok/s "
+              f"{ntok / dt:.1f} tok/s, p99 latency {lat['p99']:.2f}s "
               f"(projection weights: {stats[quant]['proj_bytes']/1e6:.2f} MB)")
 
     ratio = stats["none"]["proj_bytes"] / stats["ternary_packed"]["proj_bytes"]

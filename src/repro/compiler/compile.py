@@ -63,6 +63,32 @@ class CompileResult:
         opt = costs.get("dead-channel-elim", costs["lowered"])["ops"]
         return 1.0 - opt / base if base else 0.0
 
+    def pipeline(self, backend=None, *, scan=None):
+        """Bind the compiled program to an execution backend, keeping
+        this result attached as ``pipe.compile_result``."""
+        from repro.pipeline import CutiePipeline
+
+        pipe = CutiePipeline(self.program, backend=backend, scan=scan)
+        pipe.compile_result = self
+        return pipe
+
+    def serve(self, name: str = "default", *, engine=None,
+              scheduler="fcfs", backend=None, **executor_options):
+        """Register the compiled program with a serving engine.
+
+        The compiler-side entry point to `repro.serving`: compile a
+        Graph, then ``result.serve("resnet", engine=eng)`` to publish
+        (or hot-swap) it under a model name.  Creates a fresh
+        `CutieEngine` with ``scheduler`` when ``engine`` is None;
+        returns the engine either way.
+        """
+        from repro.serving.engine import CutieEngine
+
+        eng = engine if engine is not None else CutieEngine(scheduler)
+        eng.register(name, self.pipeline(backend=backend),
+                     **executor_options)
+        return eng
+
 
 def lower_graph(graph: Graph,
                 instance: engine.CutieInstance = engine.GF22_SCM
@@ -89,6 +115,10 @@ def compile_graph(graph: Graph,
                   options: CompilerOptions | None = None,
                   **kwargs) -> CompileResult:
     """Compile a layer graph into a validated, optimized CutieProgram."""
+    if options is not None and kwargs:
+        raise TypeError(f"pass compiler options either as options= or as "
+                        f"keywords, not both (got options= plus "
+                        f"{sorted(kwargs)})")
     opts = options or CompilerOptions(**kwargs)
     program, g = lower_graph(graph, instance)
     h, w = g.in_hw

@@ -1,6 +1,13 @@
-"""Serving driver: continuous-batching demo over a reduced config.
+"""Serving driver: scheduler-driven engine demo over a reduced config.
 
-``python -m repro.launch.serve --arch llama3.2-1b --requests 8``
+``python -m repro.launch.serve --arch llama3.2-1b --requests 8
+--scheduler priority``
+
+Drives the unified `CutieEngine` with a resident `LLMExecutor`: the
+pluggable scheduler owns admission order (every third request is
+submitted at higher priority so the priority/deadline policies visibly
+reorder), and the engine's first-class stats report per-request latency
+percentiles and queue depth alongside token throughput.
 """
 
 from __future__ import annotations
@@ -14,7 +21,7 @@ import numpy as np
 import repro.configs as configs
 from repro.models import transformer as TF
 from repro.models.config import reduce_for_smoke
-from repro.serving import Server, ServerConfig
+from repro.serving import CutieEngine, LLMExecutor, ServerConfig
 
 
 def main(argv=None):
@@ -25,27 +32,40 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=("fcfs", "priority", "deadline"))
     args = ap.parse_args(argv)
 
     cfg = reduce_for_smoke(configs.get(args.arch))
     params = TF.init_params(cfg, jax.random.PRNGKey(0))
     scfg = ServerConfig(n_slots=args.slots, max_new_tokens=args.max_new,
                         temperature=args.temperature)
-    server = Server(params, cfg, scfg)
+    engine = CutieEngine(args.scheduler)
+    engine.register("llm", LLMExecutor(params, cfg, scfg))
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        server.submit(rng.integers(0, cfg.vocab, size=args.prompt_len))
-    outs = server.run()
+    for i in range(args.requests):
+        engine.submit(rng.integers(0, cfg.vocab, size=args.prompt_len),
+                      model="llm", priority=int(i % 3 == 0),
+                      deadline=2.0 if i % 3 == 0 else 30.0,
+                      tag="urgent" if i % 3 == 0 else "bulk")
+    outs = {}
+    for handle in engine.stream():
+        outs[handle.uid] = handle.request.result
+        print(f"req {handle.uid} ({handle.request.tag}, "
+              f"{handle.latency * 1e3:.0f} ms): {handle.request.result}")
     dt = time.perf_counter() - t0
 
+    stats = engine.stats()
     total_toks = sum(len(v) for v in outs.values())
-    for uid, toks in outs.items():
-        print(f"req {uid}: {toks}")
+    lat = stats["latency"]
     print(f"{len(outs)} requests, {total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s, continuous batching over "
+          f"({total_toks / dt:.1f} tok/s, scheduler={stats['scheduler']}, "
           f"{args.slots} slots)")
+    print(f"latency p50/p95/p99: {lat['p50']:.3f}/{lat['p95']:.3f}/"
+          f"{lat['p99']:.3f}s, mean queue depth "
+          f"{stats['queue_depth']['mean']:.1f}")
     return outs
 
 

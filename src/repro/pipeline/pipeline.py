@@ -20,7 +20,7 @@ traced execution instead of re-running the network with ad-hoc flags.
     y = pipe.run(x)                                   # trits out
     y, rows = pipe.run(x, tracer=SwitchingTracer())   # + traced stats
     energy = pipe.measure(x)                          # priced inference
-    server = pipe.serve()                             # slot-batched serving
+    eng = pipe.engine("deadline")                     # scheduler-driven serving
 """
 
 from __future__ import annotations
@@ -133,6 +133,13 @@ class CutiePipeline:
     def n_layers(self) -> int:
         return len(self.program.layers)
 
+    @property
+    def n_jit_variants(self) -> int:
+        """Compiled jit specializations so far (one per input shape /
+        dtype / tracer configuration) — the quantity a serving engine's
+        batch bucketing keeps bounded."""
+        return len(self._jit_cache)
+
     def shapes(self, in_shape) -> list[tuple]:
         return program_shapes(self.program, in_shape)
 
@@ -214,8 +221,28 @@ class CutiePipeline:
     # -- serving ------------------------------------------------------------
 
     def serve(self, scfg=None, *, head=None, tracer: Tracer | None = None):
-        """Slot-based batch-inference server over this pipeline."""
-        from repro.serving.cutie_server import CutieServer, CutieServerConfig
+        """Slot-based batch-inference server over this pipeline.
 
-        return CutieServer(self, scfg or CutieServerConfig(), head=head,
-                           tracer=tracer)
+        Legacy surface; prefer :meth:`engine` for scheduling policies,
+        cancellation, deadlines and latency accounting.
+        """
+        from repro.serving.cutie_server import CutieServer
+
+        return CutieServer(self, scfg, head=head, tracer=tracer)
+
+    def engine(self, scheduler="fcfs", *, model: str = "default",
+               buckets=None, head=None, tracer: Tracer | None = None):
+        """A `CutieEngine` serving this pipeline under ``model``.
+
+        One submit -> schedule -> execute -> stream surface: pluggable
+        scheduler (``"fcfs"`` | ``"priority"`` | ``"deadline"`` or a
+        Scheduler instance), batch bucketing (jit variants bounded by
+        ``buckets``), per-request handles with cancellation, and
+        first-class latency/energy stats.  Register further models on
+        the returned engine to serve them concurrently.
+        """
+        from repro.serving.engine import CutieEngine
+
+        eng = CutieEngine(scheduler)
+        eng.register(model, self, buckets=buckets, head=head, tracer=tracer)
+        return eng

@@ -1,3 +1,35 @@
+"""`repro.serving` — one scheduler-driven serving engine.
+
+The whole serving plane sits behind :class:`CutieEngine`'s
+submit → schedule → execute → stream lifecycle: pluggable schedulers
+(FCFS / priority / deadline), a multi-model hot-swappable registry,
+batch-bucketing executors with bounded jit variants, and first-class
+latency / queue-depth / switching-energy stats.  `CutieServer` and the
+LLM `Server` remain as thin deprecated adapters over the engine.
+"""
+
 from repro.serving.cutie_server import (CutieServer,  # noqa: F401
                                         CutieServerConfig, ImageRequest)
-from repro.serving.server import Server, ServerConfig  # noqa: F401
+from repro.serving.engine import CutieEngine, percentiles  # noqa: F401
+from repro.serving.executors import (DEFAULT_BUCKETS,  # noqa: F401
+                                     ExecutionReport, Executor,
+                                     ProgramExecutor)
+from repro.serving.registry import ModelRegistry  # noqa: F401
+from repro.serving.request import (Request, RequestCancelled,  # noqa: F401
+                                   RequestHandle, RequestStatus)
+from repro.serving.scheduler import (SCHEDULERS, DeadlineScheduler,  # noqa: F401
+                                     FCFSScheduler, PriorityScheduler,
+                                     Scheduler, get_scheduler)
+from repro.serving.server import (LLMExecutor, Server,  # noqa: F401
+                                  ServerConfig)
+
+__all__ = [
+    "CutieEngine", "percentiles",
+    "ModelRegistry",
+    "Request", "RequestHandle", "RequestStatus", "RequestCancelled",
+    "Scheduler", "FCFSScheduler", "PriorityScheduler", "DeadlineScheduler",
+    "SCHEDULERS", "get_scheduler",
+    "Executor", "ProgramExecutor", "ExecutionReport", "DEFAULT_BUCKETS",
+    "LLMExecutor", "Server", "ServerConfig",
+    "CutieServer", "CutieServerConfig", "ImageRequest",
+]

@@ -1,26 +1,20 @@
-"""Slot-based batch-inference serving for compiled CUTIE programs.
+"""DEPRECATED: slot-batching `CutieServer`, now a thin adapter over
+:class:`repro.serving.CutieEngine`.
 
-The ASIC serves autonomously from its layer FIFO with the host asleep
-(paper Fig. 3); `repro.serving.server` is that loop for autoregressive
-LLMs.  This is the CNN analogue for CUTIE image requests: up to
-``n_slots`` concurrent requests form one slot batch, every ``step()``
-executes the *whole compiled program* for all of them in a single jitted
-pipeline call (no host round-trip per layer), finished slots free
-immediately and are refilled from the queue — continuous batching, except
-a CNN request completes in one step rather than one token.
-
-The server owns no execution logic: it drives a
-:class:`repro.pipeline.CutiePipeline`, so the same pipeline object that
-ran the benchmarks serves traffic, on whichever backend it was built with.
+Kept for one release so PR-1 callers keep working; new code should use
+the engine directly (``pipeline.engine()`` or ``CutieEngine``), which
+adds schedulers, cancellation, multi-model routing, deadlines and
+latency accounting.  The adapter preserves the old semantics exactly:
+FCFS admission, batch = the live slots (buckets ``1..n_slots``, so no
+padding and tracer rows describe only real traffic), at most
+``n_slots`` jit variants.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -31,6 +25,8 @@ class CutieServerConfig:
 
 @dataclasses.dataclass
 class ImageRequest:
+    """Legacy record type (import compatibility only)."""
+
     uid: int
     image: np.ndarray                    # (H, W, C) int8 trits
     result: Optional[np.ndarray] = None
@@ -38,82 +34,59 @@ class ImageRequest:
 
 
 class CutieServer:
-    """Continuous-batching front-end over a `CutiePipeline`.
+    """Continuous-batching front-end over a `CutiePipeline` (legacy API).
 
     ``head``: optional host-side callable mapping one request's final trit
     tensor to its response (e.g. the fp classifier head); default returns
     the trit features themselves.
     """
 
-    def __init__(self, pipeline, scfg: CutieServerConfig = CutieServerConfig(),
+    def __init__(self, pipeline, scfg: Optional[CutieServerConfig] = None,
                  *, head: Optional[Callable] = None, tracer=None):
+        from repro.serving.engine import CutieEngine
+
+        # None sentinel: each server gets its own config instance rather
+        # than all of them sharing one evaluated-at-def-time default.
+        self.scfg = scfg if scfg is not None else CutieServerConfig()
         self.pipeline = pipeline
-        self.scfg = scfg
         self.head = head
         self.tracer = tracer
-        self.active: list[Optional[ImageRequest]] = [None] * scfg.n_slots
-        self.queue: deque[ImageRequest] = deque()
-        self.finished: dict[int, ImageRequest] = {}
-        self.traced: list = []           # tracer rows per executed batch
-        self.n_batches = 0
-        self._uid = 0
-        self._shape: Optional[tuple] = None          # (H, W, C) per request
+        self.engine = CutieEngine("fcfs")
+        self.engine.register(
+            "default", pipeline,
+            buckets=tuple(range(1, self.scfg.n_slots + 1)),
+            head=head, tracer=tracer)
 
     # -- public API ---------------------------------------------------------
 
     def submit(self, image) -> int:
         """Queue one (H, W, C) int8 trit image; returns its request id."""
-        img = np.asarray(image, np.int8)
-        if img.ndim != 3:
-            raise ValueError(f"expected (H, W, C) trit image, got {img.shape}")
-        if self._shape is None:
-            self._shape = img.shape
-        elif img.shape != self._shape:
-            raise ValueError(
-                f"image {img.shape} does not match serving shape "
-                f"{self._shape}")
-        self._uid += 1
-        self.queue.append(ImageRequest(self._uid, img))
-        return self._uid
+        return self.engine.submit(image).uid
+
+    def step(self) -> bool:
+        """Admit + execute one slot batch.  False when idle."""
+        return self.engine.step()
 
     def run(self, max_steps: int = 10_000) -> dict[int, np.ndarray]:
         """Drive until every submitted request completes."""
-        for _ in range(max_steps):
-            if not self.step():
-                break
-        return {uid: r.result for uid, r in sorted(self.finished.items())}
+        return self.engine.run(max_steps)
 
-    # -- engine -------------------------------------------------------------
+    # -- legacy accounting --------------------------------------------------
 
-    def step(self) -> bool:
-        """Admit + execute one slot batch.  False when idle.
+    @property
+    def n_batches(self) -> int:
+        return self.engine.n_batches
 
-        The batch holds exactly the live requests, so tracer rows describe
-        only real traffic (no padding slots in the statistics).  Batch
-        sizes range over 1..n_slots — at most n_slots jit variants, and in
-        the loaded steady state every batch is full.
-        """
-        self._admit()
-        live = [r for r in self.active if r is not None]
-        if not live:
-            return False
-        batch = jnp.asarray(np.stack([r.image for r in live]))
-        out = self.pipeline.run(batch, tracer=self.tracer)
-        if self.tracer is not None:
-            out, rows = out
-            self.traced.append(rows)
-        feats = np.asarray(out)
-        self.n_batches += 1
-        for i, req in enumerate(live):
-            req.result = (self.head(feats[i]) if self.head is not None
-                          else feats[i])
-            req.done = True
-            self.finished[req.uid] = req
-        self.active = [None] * self.scfg.n_slots
-        return True
+    @property
+    def traced(self) -> list:
+        """Tracer rows per executed slot batch (when built with a tracer)."""
+        return self.engine.traced("default")
 
-    def _admit(self):
-        for slot in range(self.scfg.n_slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            self.active[slot] = self.queue.popleft()
+    @property
+    def finished(self) -> dict[int, ImageRequest]:
+        """Completed requests as the legacy ImageRequest records."""
+        from repro.serving.request import RequestStatus
+
+        return {uid: ImageRequest(uid, r.value, r.result, True)
+                for uid, r in sorted(self.engine._requests.items())
+                if r.status is RequestStatus.DONE}

@@ -1,0 +1,299 @@
+"""`CutieEngine` — one scheduler-driven serving engine for the repo.
+
+The CUTIE ASIC's serving story is a hardware engine draining a layer
+FIFO autonomously while the host sleeps (paper Fig. 3).  This is the
+host-side counterpart for heavy traffic: a single engine behind a
+
+    submit -> schedule -> execute -> stream
+
+lifecycle.  ``submit()`` validates a request against its model and
+returns a :class:`~repro.serving.request.RequestHandle`; a pluggable
+:class:`~repro.serving.scheduler.Scheduler` owns admission and batch
+formation (FCFS / priority / deadline); a batch-bucketing
+:class:`~repro.serving.executors.Executor` runs each batch as one jitted
+whole-program call (jit variants bounded by the bucket set); completed
+results stream back through ``stream()`` / ``result()``.  A
+:class:`~repro.serving.registry.ModelRegistry` serves multiple compiled
+programs concurrently with hot-swap.
+
+Latency, queue-depth and tracer-derived switching-energy accounting are
+first-class: every request is timestamped through its lifecycle and
+``stats()`` aggregates p50/p95/p99 latency (overall and per tag),
+queue-time, queue depth, batch occupancy, deadline hit-rate, jit-variant
+counts and switching energy.
+
+    engine = CutieEngine("deadline")
+    engine.register("cnn", graph_or_program, backend="pallas")
+    h = engine.submit(img, model="cnn", deadline=0.05)
+    y = h.result()                      # drives the engine
+    for done in engine.stream():        # or: drain everything
+        consume(done.uid, done.request.result)
+    print(engine.stats()["latency"])
+
+The engine is synchronous and step-driven — ``step()`` is one
+schedule+execute round, and ``run()``/``stream()``/``result()`` are
+loops over it — so serving, benchmarks and tests all drive the exact
+same code path.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+from repro.serving.executors import ProgramExecutor
+from repro.serving.registry import ModelRegistry
+from repro.serving.request import Request, RequestHandle, RequestStatus
+from repro.serving.scheduler import get_scheduler
+
+
+def percentiles(samples, ps=(50, 95, 99)) -> dict:
+    """{"p50": ..., "p95": ..., "p99": ...} (None when no samples)."""
+    if not samples:
+        return {f"p{p}": None for p in ps}
+    arr = np.asarray(samples, np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+
+class CutieEngine:
+    """One serving engine: pluggable scheduler, multi-model, bucketed
+    batches, first-class latency/energy accounting."""
+
+    def __init__(self, scheduler="fcfs", *,
+                 registry: Optional[ModelRegistry] = None,
+                 clock=time.monotonic, history: int = 100_000):
+        self.registry = registry or ModelRegistry()
+        self.scheduler = get_scheduler(scheduler)
+        self.clock = clock
+        self._requests: dict[int, Request] = {}
+        self._handles: dict[int, RequestHandle] = {}
+        self._completed: deque[RequestHandle] = deque()
+        self._uid = 0
+        self._seq = 0
+        # accounting: counters are exact for the engine's lifetime; the
+        # per-sample records (latency/queue-depth/batch rows) keep the
+        # most recent ``history`` entries so a long-lived server's
+        # memory stays bounded (see also evict_completed()).
+        self.n_batches = 0
+        self.n_cancelled = 0
+        self.n_done = 0
+        self.batches: deque[dict] = deque(maxlen=history)
+        self._queue_depth: deque[int] = deque(maxlen=history)
+        self._done: deque[Request] = deque(maxlen=history)
+        self._energy_uj = 0.0
+
+    # -- models -------------------------------------------------------------
+
+    def register(self, name: str, source, **options):
+        """Register (or hot-swap) a model; see ModelRegistry.register."""
+        return self.registry.register(name, source, **options)
+
+    def models(self) -> list[str]:
+        return self.registry.names()
+
+    # -- submit -------------------------------------------------------------
+
+    def submit(self, value, model: Optional[str] = None, *,
+               priority: int = 0, deadline: Optional[float] = None,
+               tag: Optional[str] = None) -> RequestHandle:
+        """Validate + enqueue one request; returns its handle.
+
+        ``model`` may be omitted when exactly one model is registered.
+        ``deadline`` is an SLA in seconds from now (used by the deadline
+        scheduler and the deadline-met stats); ``priority`` is higher-
+        first (priority scheduler); ``tag`` labels the request for
+        per-class latency stats.
+        """
+        if model is None:
+            names = self.registry.names()
+            if len(names) == 1:
+                model = names[0]
+            elif "default" in names:
+                model = "default"
+            else:
+                raise ValueError(
+                    "model= is required: engine serves "
+                    f"{names or 'no models'}")
+        executor = self.registry[model]
+        value = executor.validate(value)
+        self._uid += 1
+        self._seq += 1
+        req = Request(uid=self._uid, model=model, value=value,
+                      priority=priority, deadline=deadline, tag=tag,
+                      seq=self._seq, submit_t=self.clock())
+        self.scheduler.add(req)
+        handle = RequestHandle(self, req)
+        self._requests[req.uid] = req
+        self._handles[req.uid] = handle
+        return handle
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued request; False once admitted or finished."""
+        req = self._requests.get(uid)
+        if req is None or req.status is not RequestStatus.QUEUED:
+            return False
+        if self.scheduler.remove(uid) is None:
+            return False
+        req.status = RequestStatus.CANCELLED
+        req.done_t = self.clock()
+        self.n_cancelled += 1
+        return True
+
+    # -- schedule + execute -------------------------------------------------
+
+    def step(self) -> bool:
+        """One schedule+execute round; False when nothing progressed."""
+        now = self.clock()
+        self._queue_depth.append(len(self.scheduler))
+        capacities = {name: ex.free_capacity()
+                      for name, ex in self.registry.items()}
+        picked = self.scheduler.next_batch(capacities, now)
+        admissions = {picked[0]: picked[1]} if picked else {}
+        progressed = False
+        for name, executor in self.registry.items():
+            reqs = admissions.get(name, [])
+            if not reqs and not executor.has_resident():
+                continue
+            start = self.clock()
+            for r in reqs:
+                r.status = RequestStatus.RUNNING
+                r.schedule_t = start
+            try:
+                report = executor.execute(reqs)
+            except Exception as err:
+                self._fail(reqs, err)
+                raise
+            done_t = self.clock()
+            self.n_batches += 1
+            self.batches.append({
+                "model": name, "live": report.live,
+                "padded": report.padded, "seconds": done_t - start,
+                "rows": report.rows,
+            })
+            if report.energy_uj is not None:
+                self._energy_uj += report.energy_uj * report.live
+            for uid, result in report.completions:
+                req = self._requests[uid]
+                req.result = result
+                req.status = RequestStatus.DONE
+                req.done_t = done_t
+                self.n_done += 1
+                self._done.append(req)
+                self._completed.append(self._handles[uid])
+            progressed = True
+        return progressed
+
+    def _fail(self, reqs: list[Request], err: BaseException) -> None:
+        """Mark an errored batch FAILED so its handles report the error
+        instead of stranding forever in RUNNING."""
+        done_t = self.clock()
+        for r in reqs:
+            r.status = RequestStatus.FAILED
+            r.error = err
+            r.done_t = done_t
+            self._completed.append(self._handles[r.uid])
+
+    def busy(self) -> bool:
+        """Queued or resident work remains."""
+        return (len(self.scheduler) > 0
+                or any(ex.has_resident()
+                       for _, ex in self.registry.items()))
+
+    def run(self, max_steps: int = 100_000) -> dict[int, Any]:
+        """Drive until idle; {uid: result} for every completed request."""
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return {uid: r.result for uid, r in sorted(self._requests.items())
+                if r.status is RequestStatus.DONE}
+
+    def stream(self, max_steps: int = 100_000
+               ) -> Iterator[RequestHandle]:
+        """Yield handles in completion order, stepping until idle."""
+        for _ in range(max_steps):
+            while self._completed:
+                yield self._completed.popleft()
+            if not self.busy() or not self.step():
+                break
+        while self._completed:
+            yield self._completed.popleft()
+
+    # -- accounting ---------------------------------------------------------
+
+    def evict_completed(self) -> int:
+        """Drop finished requests and their handles from the engine.
+
+        For long-lived servers: once results have been consumed (via
+        ``stream()`` or handles), evicting bounds memory — counters and
+        the windowed stats survive, but ``run()``'s cumulative result
+        dict forgets the evicted uids.  Returns the eviction count.
+        """
+        gone = [uid for uid, r in self._requests.items()
+                if r.status in (RequestStatus.DONE, RequestStatus.CANCELLED,
+                                RequestStatus.FAILED)]
+        for uid in gone:
+            del self._requests[uid]
+            del self._handles[uid]
+        return len(gone)
+
+    def stats(self) -> dict:
+        """Engine-level serving statistics (all times in seconds).
+
+        Counters (``n_*``) are exact for the engine's lifetime; sampled
+        distributions cover the most recent ``history`` entries.
+        """
+        lat = [r.latency for r in self._done]
+        qt = [r.queue_time for r in self._done
+              if r.queue_time is not None]
+        met = [r.deadline_met for r in self._done
+               if r.deadline_met is not None]
+        by_tag: dict = {}
+        for tag in sorted({r.tag for r in self._done if r.tag is not None}):
+            rs = [r for r in self._done if r.tag == tag]
+            tmet = [r.deadline_met for r in rs
+                    if r.deadline_met is not None]
+            by_tag[tag] = {
+                "n": len(rs),
+                **percentiles([r.latency for r in rs]),
+                "deadline_met_frac": (sum(tmet) / len(tmet)
+                                      if tmet else None),
+            }
+        occ = [b["live"] / b["padded"] for b in self.batches]
+        jit_variants = {
+            name: ex.n_jit_variants
+            for name, ex in self.registry.items()
+            if isinstance(ex, ProgramExecutor)}
+        return {
+            "scheduler": self.scheduler.name,
+            "n_requests": self._uid,
+            "n_done": self.n_done,
+            "n_cancelled": self.n_cancelled,
+            "n_batches": self.n_batches,
+            "latency": {**percentiles(lat),
+                        "mean": float(np.mean(lat)) if lat else None,
+                        "max": float(np.max(lat)) if lat else None},
+            "queue_time": percentiles(qt),
+            "queue_depth": {
+                "mean": (float(np.mean(self._queue_depth))
+                         if self._queue_depth else 0.0),
+                "max": max(self._queue_depth, default=0)},
+            "batch_occupancy": float(np.mean(occ)) if occ else None,
+            "deadline_met_frac": (sum(met) / len(met)) if met else None,
+            "by_tag": by_tag,
+            "energy_uj": self._energy_uj if self._energy_uj else None,
+            "jit_variants": jit_variants,
+        }
+
+    def traced(self, model: Optional[str] = None) -> list:
+        """Tracer rows per executed batch (for tracing executors)."""
+        return [b["rows"] for b in self.batches
+                if b["rows"] is not None
+                and (model is None or b["model"] == model)]
+
+    def __repr__(self) -> str:
+        return (f"CutieEngine(scheduler={self.scheduler.name!r}, "
+                f"models={self.models()}, queued={len(self.scheduler)}, "
+                f"done={len(self._done)})")

@@ -1,0 +1,100 @@
+"""Multi-model registry: compiled programs served by name, hot-swappable.
+
+One engine serves many models concurrently; requests route by model
+name.  ``register`` accepts anything on the compile path — a
+`repro.compiler.Graph` (compiled via the graph compiler), a
+`CompileResult`, a raw `CutieProgram`, an already-bound `CutiePipeline`,
+or a custom `Executor` — and normalizes it to an executor.
+
+Registering an existing name replaces the executor in place (hot-swap):
+requests already queued under that name execute on the new model at
+their next admission.  The swapped-in model must accept the same input
+shape as any still-queued traffic, since inputs were validated against
+the old executor at submit time.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.serving.executors import Executor, ProgramExecutor
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._executors: dict[str, Executor] = {}
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, source, *, backend=None,
+                 buckets: Optional[Sequence[int]] = None, head=None,
+                 tracer=None, instance=None, **compiler_options) -> Executor:
+        """Register ``source`` under ``name``; returns its executor.
+
+        ``backend``/``buckets``/``head``/``tracer`` configure the
+        ProgramExecutor built for program-like sources;
+        ``instance``/``compiler_options`` apply to the Graph compile
+        path only.  An Executor instance is registered as-is.
+        """
+        executor = self._build(source, backend=backend, buckets=buckets,
+                               head=head, tracer=tracer, instance=instance,
+                               **compiler_options)
+        self._executors[name] = executor
+        return executor
+
+    def _build(self, source, *, backend, buckets, head, tracer, instance,
+               **compiler_options) -> Executor:
+        if isinstance(source, Executor):
+            return source
+
+        from repro.core import engine as core_engine
+        from repro.pipeline import CutiePipeline
+
+        if isinstance(source, CutiePipeline):
+            pipe = source
+        elif isinstance(source, core_engine.CutieProgram):
+            pipe = CutiePipeline(source, backend=backend)
+        else:
+            from repro import compiler
+
+            if isinstance(source, compiler.CompileResult):
+                pipe = CutiePipeline(source.program, backend=backend)
+            elif isinstance(source, compiler.Graph):
+                kw = dict(compiler_options, backend=backend)
+                if instance is not None:
+                    kw["instance"] = instance
+                pipe = CutiePipeline.compile(source, **kw)
+            else:
+                raise TypeError(
+                    f"cannot register a {type(source).__name__}: expected "
+                    "a Graph, CompileResult, CutieProgram, CutiePipeline "
+                    "or Executor")
+        return ProgramExecutor(pipe, buckets=buckets, head=head,
+                               tracer=tracer)
+
+    def unregister(self, name: str) -> Executor:
+        if name not in self._executors:
+            raise ValueError(f"unknown model {name!r}")
+        return self._executors.pop(name)
+
+    # -- lookup -------------------------------------------------------------
+
+    def __getitem__(self, name: str) -> Executor:
+        try:
+            return self._executors[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown model {name!r}; registered: "
+                f"{sorted(self._executors) or '(none)'}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._executors
+
+    def __len__(self) -> int:
+        return len(self._executors)
+
+    def names(self) -> list[str]:
+        return sorted(self._executors)
+
+    def items(self):
+        return list(self._executors.items())

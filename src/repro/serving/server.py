@@ -1,28 +1,34 @@
-"""Slot-based continuous-batching serving runtime.
+"""Autoregressive LLM serving on the engine: a slot-resident executor.
 
 The CUTIE ASIC serves autonomously from a layer FIFO with the host asleep
 (paper Fig. 3); the framework analogue is a serving loop whose inner decode
 is ONE jitted step for the whole slot batch — no host round-trip per token
 per request.
 
-Mechanics:
+:class:`LLMExecutor` is that loop as a resident
+:class:`~repro.serving.executors.Executor`:
+
   * ``n_slots`` concurrent sequences share a batched KV cache
     (L, n_slots, max_len, Hk, Dh);
-  * arriving requests are prefill'd (single jitted prefill) and their cache
-    rows inserted into free slots;
-  * every `step()` advances all active slots by one token (greedy or
+  * requests the scheduler admits are prefill'd (single jitted prefill)
+    and their cache rows inserted into free slots;
+  * every ``execute()`` advances all active slots by one token (greedy or
     temperature sampling);
-  * finished slots (EOS or length cap) free immediately and are refilled
-    from the queue — continuous batching.
+  * finished slots (EOS or length cap) free immediately, so the engine's
+    next admission refills them from the scheduler — continuous batching,
+    with admission *order* owned by the engine's pluggable scheduler
+    (FCFS / priority / deadline) instead of hard-coded here.
 
 Works for the attention families; SSM/hybrid serving uses the same loop
 with state slots instead of KV rows (constant memory in sequence length).
+
+:class:`Server` is the legacy PR-1 surface, kept for one release as a
+thin adapter: one engine, one ``"llm"`` model, FCFS.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Optional
 
 import jax
@@ -31,6 +37,7 @@ import numpy as np
 
 from repro.models import decoding as DEC
 from repro.models.config import ArchConfig
+from repro.serving.executors import ExecutionReport, Executor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,25 +50,17 @@ class ServerConfig:
     seed: int = 0
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+class LLMExecutor(Executor):
+    """Slot-resident continuous-batching decode loop as an executor."""
 
-
-class Server:
     def __init__(self, params, cfg: ArchConfig, scfg: ServerConfig):
         assert cfg.family in ("dense", "vlm", "moe"), cfg.family
         self.params, self.cfg, self.scfg = params, cfg, scfg
         self.caches = DEC.init_caches(cfg, scfg.n_slots, scfg.max_len)
         self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
         self.cur_tok = jnp.zeros((scfg.n_slots, 1), jnp.int32)
-        self.active: list[Optional[Request]] = [None] * scfg.n_slots
-        self.queue: deque[Request] = deque()
-        self.finished: dict[int, Request] = {}
-        self._uid = 0
+        self.slots: list = [None] * scfg.n_slots       # resident Requests
+        self._tokens: dict[int, list[int]] = {}        # uid -> output tokens
         self._key = jax.random.PRNGKey(scfg.seed)
 
         self._decode = jax.jit(
@@ -69,62 +68,67 @@ class Server:
         self._prefill = jax.jit(
             lambda p, b: DEC.prefill_with_cache(p, b, cfg, scfg.max_len))
 
-    # -- public API ---------------------------------------------------------
+    # -- engine protocol ----------------------------------------------------
 
-    def submit(self, prompt) -> int:
-        self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32)))
-        return self._uid
+    def validate(self, prompt) -> np.ndarray:
+        arr = np.asarray(prompt, np.int32)
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError(f"expected a non-empty 1-D token prompt, "
+                             f"got shape {arr.shape}")
+        if arr.size >= self.scfg.max_len:
+            raise ValueError(f"prompt of {arr.size} tokens exceeds "
+                             f"max_len={self.scfg.max_len}")
+        return arr
 
-    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
-        """Drive until every submitted request completes."""
-        for _ in range(max_steps):
-            if not self.step():
-                break
-        return {uid: r.out_tokens for uid, r in sorted(self.finished.items())}
+    def free_capacity(self) -> int:
+        return sum(r is None for r in self.slots)
 
-    # -- engine -------------------------------------------------------------
+    def has_resident(self) -> bool:
+        return any(r is not None for r in self.slots)
 
-    def step(self) -> bool:
-        """Admit + decode one token for all active slots.  False when idle."""
-        self._admit()
-        if not any(r is not None for r in self.active):
-            return False
+    def execute(self, requests) -> ExecutionReport:
+        """Prefill newly admitted requests, decode one token for all
+        active slots, release finished ones."""
+        for req in requests:
+            self._admit(req)
+        live = sum(r is not None for r in self.slots)
+        completions: list = []
+        if live == 0:
+            return ExecutionReport(completions, 0, self.scfg.n_slots)
         logits, self.caches = self._decode(
             self.params, self.cur_tok, self.caches, self.pos)
         nxt = self._sample(logits)          # (n_slots,)
         self.pos = self.pos + 1
         self.cur_tok = nxt[:, None]
-        for i, req in enumerate(self.active):
+        for i, req in enumerate(self.slots):
             if req is None:
                 continue
             tok = int(nxt[i])
-            req.out_tokens.append(tok)
+            toks = self._tokens[req.uid]
+            toks.append(tok)
             if tok == self.scfg.eos_id or \
-                    len(req.out_tokens) >= self.scfg.max_new_tokens or \
+                    len(toks) >= self.scfg.max_new_tokens or \
                     int(self.pos[i]) >= self.scfg.max_len - 1:
-                req.done = True
-                self.finished[req.uid] = req
-                self.active[i] = None
-        return True
+                completions.append((req.uid, self._tokens.pop(req.uid)))
+                self.slots[i] = None
+        return ExecutionReport(completions, live, self.scfg.n_slots)
 
-    def _admit(self):
-        for slot in range(self.scfg.n_slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt[None])})
-            plen = len(req.prompt)
-            # insert this request's cache rows into the batched cache
-            self.caches = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
-                self.caches, caches)
-            first = self._sample(logits)[0]
-            req.out_tokens.append(int(first))
-            self.pos = self.pos.at[slot].set(plen)
-            self.cur_tok = self.cur_tok.at[slot, 0].set(first)
-            self.active[slot] = req
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self, req) -> None:
+        slot = self.slots.index(None)
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.value[None])})
+        plen = len(req.value)
+        # insert this request's cache rows into the batched cache
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]),
+            self.caches, caches)
+        first = self._sample(logits)[0]
+        self._tokens[req.uid] = [int(first)]
+        self.pos = self.pos.at[slot].set(plen)
+        self.cur_tok = self.cur_tok.at[slot, 0].set(first)
+        self.slots[slot] = req
 
     def _sample(self, logits) -> jax.Array:
         lg = logits[:, -1, : self.cfg.vocab]
@@ -133,3 +137,28 @@ class Server:
         self._key, k = jax.random.split(self._key)
         return jax.random.categorical(
             k, lg / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+
+class Server:
+    """DEPRECATED thin adapter: the PR-1 LLM server surface over one
+    FCFS `CutieEngine` serving a single `LLMExecutor`.  Kept for one
+    release; new code should register an LLMExecutor on an engine."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg: ServerConfig):
+        from repro.serving.engine import CutieEngine
+
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.engine = CutieEngine("fcfs")
+        self.executor = self.engine.register(
+            "llm", LLMExecutor(params, cfg, scfg))
+
+    def submit(self, prompt) -> int:
+        return self.engine.submit(prompt, model="llm").uid
+
+    def step(self) -> bool:
+        """Admit + decode one token for all active slots.  False when idle."""
+        return self.engine.step()
+
+    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        """Drive until every submitted request completes."""
+        return self.engine.run(max_steps)
