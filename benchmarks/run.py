@@ -1,24 +1,32 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig10,table2] [--fast]
+                                          [--smoke]
 
-Writes results/bench/<name>.json + a combined markdown report, and prints
-``name,seconds,headline`` CSV lines.  --fast skips the QAT-training-heavy
-tables unless their caches exist (CI mode).
+Writes results/bench/<name>.json + a combined markdown report, prints
+``name,seconds,headline`` CSV lines, and emits one repo-root
+``BENCH_<name>.json`` artifact per benchmark (schema: ``{name, config,
+metrics, timestamp, git_sha}``) so the perf trajectory is recorded and
+CI can upload it.  --fast skips the QAT-training-heavy tables unless
+their caches exist (CI mode); --smoke asks each benchmark that supports
+it for a reduced-size run (shared-runner mode).
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
+import inspect
 import json
 import os
+import subprocess
 import time
 import traceback
 
 from benchmarks import (backend_parity, compiler_report, fig6_channels,
                         fig10_switching, fig11_energy, roofline_report,
-                        serving_load, table2_tiling, table4_strategies,
-                        table5_sota)
+                        serving_load, sharding_scaling, table2_tiling,
+                        table4_strategies, table5_sota)
 
 HEAVY = {"table4", "fig11", "compiler"}
 
@@ -33,16 +41,58 @@ BENCHES = {
     "backends": backend_parity,
     "compiler": compiler_report,
     "serving": serving_load,
+    "sharding": sharding_scaling,
 }
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _headline(name: str, res: dict) -> str:
     if "checks" in res:
-        ok = sum(bool(v) for v in res["checks"].values())
-        return f"{ok}/{len(res['checks'])} checks pass"
+        # None = recorded but not evaluated (e.g. speed checks on hosts
+        # without enough cores); only true/false checks count.
+        evaluated = {k: v for k, v in res["checks"].items()
+                     if v is not None}
+        ok = sum(bool(v) for v in evaluated.values())
+        return f"{ok}/{len(evaluated)} checks pass"
     if name == "roofline":
         return f"{res['n_cells']} cells"
     return "ok"
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, text=True,
+            capture_output=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git in the environment
+        return "unknown"
+
+
+def write_artifact(name: str, res: dict, git_sha: str) -> str:
+    """Repo-root BENCH_<name>.json: the recorded perf-trajectory point."""
+    artifact = {
+        "name": name,
+        "config": res.get("config", {}),
+        "metrics": {k: v for k, v in res.items() if k != "config"},
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "git_sha": git_sha,
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=1, default=str)
+    return path
+
+
+def _call_run(mod, smoke: bool) -> dict:
+    """mod.run(), passing smoke= through to benchmarks that take it."""
+    if smoke and "smoke" in inspect.signature(mod.run).parameters:
+        return mod.run(smoke=True)
+    return mod.run()
 
 
 def main(argv=None) -> int:
@@ -50,11 +100,14 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
                     help="skip QAT-heavy benches without a cache")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced-size runs where supported (CI smoke)")
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args(argv)
 
     names = (args.only.split(",") if args.only else list(BENCHES))
     os.makedirs(args.out, exist_ok=True)
+    git_sha = _git_sha()
     report_md, failures = [], []
     print("name,seconds,headline")
     for name in names:
@@ -66,7 +119,7 @@ def main(argv=None) -> int:
                 continue
         t0 = time.time()
         try:
-            res = mod.run()
+            res = _call_run(mod, args.smoke)
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc()
@@ -75,6 +128,7 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(res, f, indent=1, default=str)
+        write_artifact(name, res, git_sha)
         report_md.append(mod.report(res))
         print(f"{name},{dt:.1f},{_headline(name, res)}")
 

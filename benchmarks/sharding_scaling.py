@@ -1,0 +1,206 @@
+"""Multi-device scaling of CutiePrograms: throughput vs device count.
+
+CUTIE's unrolling argument (paper §III; Tridgell et al.) says throughput
+scales with the compute fabric you unroll onto.  This benchmark measures
+the software analogue on the CIFAR CutieProgram (paper Table III layout,
+width-reduced for CPU budgets): data-parallel batch sharding and
+filter-dimension (OCU/output-channel) sharding over a host-device mesh,
+via ``CutiePipeline(mesh=...)``.
+
+Records, per device count: steady-state throughput (img/s), speedup over
+1 device, and — the hard gate — bit-exactness of every sharded output
+against the unsharded ``ref`` oracle (including a batch that does not
+divide the mesh, exercising the padding path).  Bit-exactness failures
+raise, so CI fails on correctness, never on absolute speed (shared
+runners).  The >4x-at-8-devices scaling check is only evaluated when the
+host actually has >= 8 cores; otherwise it is recorded as ``None``.
+
+The measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<N>`` so it works no
+matter how the parent process initialized jax.
+
+    PYTHONPATH=src python benchmarks/sharding_scaling.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+N_DEVICES = 8
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _config(smoke: bool) -> dict:
+    return {
+        "devices": [1, 2, 4, 8],
+        "width": 8 if smoke else 16,
+        "thermometer_m": 2 if smoke else 4,
+        "batch": 16 if smoke else 32,
+        "reps": 2 if smoke else 3,
+        "filter_degrees": [2] if smoke else [2, 4],
+        "smoke": smoke,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Measurement (runs inside the subprocess — 8 host devices forced)
+# ---------------------------------------------------------------------------
+
+
+def _measure(cfg: dict) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs.cutie_cnn import CutieCNNConfig
+    from repro.models import cutie_cnn
+    from repro.pipeline import CutiePipeline, MeshSpec
+
+    ccfg = CutieCNNConfig(width=cfg["width"],
+                          thermometer_m=cfg["thermometer_m"])
+    params = cutie_cnn.init_params(ccfg, jax.random.PRNGKey(0))
+    prog = cutie_cnn.to_program(params, ccfg)
+
+    rng = np.random.default_rng(0)
+    batch = cfg["batch"]
+    x = rng.integers(-1, 2, (batch, ccfg.img_hw, ccfg.img_hw,
+                             ccfg.in_channels)).astype(np.int8)
+    x_odd = x[: batch - 3]          # padding path: does not divide any mesh
+
+    ref = CutiePipeline(prog, backend="ref")
+    y_ref = np.asarray(ref.run(x))
+    y_ref_odd = y_ref[: batch - 3]
+
+    def timed(pipe, xb) -> float:
+        jax.block_until_ready(pipe.run(xb))          # compile + warm
+        best = float("inf")
+        for _ in range(cfg["reps"]):
+            t0 = time.perf_counter()
+            jax.block_until_ready(pipe.run(xb))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    checks: dict = {}
+    throughput, speedup = {}, {}
+    for d in cfg["devices"]:
+        pipe = CutiePipeline(prog, backend="ref", mesh=MeshSpec(data=d))
+        y = np.asarray(pipe.run(x))
+        bit = bool((y == y_ref).all())
+        checks[f"bit_exact_data{d}"] = bit
+        if not bit:
+            raise AssertionError(
+                f"data-parallel output (mesh data:{d}) differs from the "
+                f"ref oracle")
+        throughput[str(d)] = batch / timed(pipe, x)
+    base = throughput["1"]
+    speedup = {d: t / base for d, t in throughput.items()}
+
+    # padding path: batch that does not divide the mesh
+    pipe = CutiePipeline(prog, backend="ref",
+                         mesh=MeshSpec(data=cfg["devices"][-1]))
+    y = np.asarray(pipe.run(x_odd))
+    checks["bit_exact_padding"] = bool((y == y_ref_odd).all())
+    if not checks["bit_exact_padding"]:
+        raise AssertionError("padded-batch sharded output differs from "
+                             "the ref oracle")
+
+    # filter-dimension (output-channel / OCU) sharding
+    filter_tp = {}
+    for f in cfg["filter_degrees"]:
+        pipe = CutiePipeline(prog, backend="ref", mesh=MeshSpec(filter=f))
+        y = np.asarray(pipe.run(x))
+        bit = bool((y == y_ref).all())
+        checks[f"bit_exact_filter{f}"] = bit
+        if not bit:
+            raise AssertionError(
+                f"filter-sharded output (mesh filter:{f}) differs from "
+                f"the ref oracle")
+        filter_tp[str(f)] = batch / timed(pipe, x)
+
+    n_cores = os.cpu_count() or 1
+    top = str(cfg["devices"][-1])
+    checks["scaling_4x_8dev"] = (speedup[top] > 4.0 if n_cores >= 8
+                                 else None)
+    return {
+        "config": {**cfg, "host_cores": n_cores,
+                   "layers": len(prog.layers)},
+        "throughput_img_s": throughput,
+        "speedup_vs_1dev": speedup,
+        "filter_throughput_img_s": filter_tp,
+        "checks": checks,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Harness entry points
+# ---------------------------------------------------------------------------
+
+
+def run(smoke: bool = False) -> dict:
+    """Spawn the measurement under a forced 8-host-device CPU topology."""
+    cfg = _config(smoke)
+    env = dict(os.environ)
+    # Replace (not keep) any inherited host-device count: a parent that
+    # exported a smaller value would otherwise break the 8-device mesh.
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if not f.startswith(_FLAG)]
+    env["XLA_FLAGS"] = " ".join(flags + [f"{_FLAG}={N_DEVICES}"])
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    argv = [sys.executable, os.path.abspath(__file__), "--json"]
+    if smoke:
+        argv.append("--smoke")
+    r = subprocess.run(argv, env=env, cwd=root, capture_output=True,
+                       text=True, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharding subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def report(res: dict) -> str:
+    cfg = res["config"]
+    lines = [
+        "## Sharded multi-device scaling (CIFAR CutieProgram)",
+        "",
+        f"width={cfg['width']}, batch={cfg['batch']}, "
+        f"{cfg['layers']} layers, {cfg['host_cores']} host cores",
+        "",
+        "| devices (data) | img/s | speedup |",
+        "|---|---|---|",
+    ]
+    for d, tp in res["throughput_img_s"].items():
+        lines.append(f"| {d} | {tp:.1f} | "
+                     f"{res['speedup_vs_1dev'][d]:.2f}x |")
+    lines += ["", "| filter shards | img/s |", "|---|---|"]
+    for f, tp in res["filter_throughput_img_s"].items():
+        lines.append(f"| {f} | {tp:.1f} |")
+    checks = ", ".join(f"{k}={v}" for k, v in res["checks"].items())
+    lines += ["", f"checks: {checks}"]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="measure in-process and print one JSON line "
+                    "(expects XLA_FLAGS host-device count already set)")
+    args = ap.parse_args(argv)
+    if args.json:
+        res = _measure(_config(args.smoke))
+        print(json.dumps(res))
+        return 0
+    res = run(smoke=args.smoke)
+    print(report(res))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,330 @@
+"""Device-mesh execution for compiled CUTIE programs.
+
+CUTIE's core argument (paper §III) is that completely unrolling the
+filter and feature-map loops onto parallel compute units maximizes data
+re-use; Tridgell et al. show the same unrolling scales with the
+available fabric.  This module is the multi-device analogue of adding
+fabric: a compiled :class:`~repro.core.engine.CutieProgram` executes
+
+* **data-parallel** over the batch axis (each device runs the whole
+  program on a batch shard), and/or
+* **filter-parallel** over each layer's output-channel (OCU) axis: the
+  layer's weight/threshold tensors are split across devices, every
+  device computes its slice of output channels, and the ternary
+  activations are all-gathered between layers — the software analogue
+  of scaling the OCU array itself.
+
+Everything is built on ``shard_map`` over a ``("data", "filter")`` mesh
+through the version shims in :mod:`repro.launch._compat`, so it runs on
+CPU host-device meshes (``XLA_FLAGS=--xla_force_host_platform_device_
+count=N``) and real accelerator meshes alike.  Sharded execution is
+bit-identical to the single-device backends: batch shards are
+independent, channel slices are independent, and padding is done with
+zero weights / constant-zero thresholds that cannot perturb live
+channels.
+
+The front door is :class:`repro.pipeline.CutiePipeline`::
+
+    pipe = CutiePipeline(prog, backend="ref", mesh="data:4,filter:2")
+    y = pipe.run(x)        # any batch size; padded + cropped internally
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import engine, folding
+from repro.launch import _compat
+
+Array = jax.Array
+
+DATA_AXIS = "data"
+FILTER_AXIS = "filter"
+
+
+def _ceil_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Mesh specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """How many devices shard the batch (``data``) and the output-channel
+    / OCU (``filter``) dimensions.
+
+    Accepted spellings (see :meth:`parse`): an int (pure data
+    parallelism), a ``"data:4,filter:2"`` string, a dict, a (data,
+    filter) tuple, an existing MeshSpec, or a ``jax.sharding.Mesh``
+    with axes named ``data``/``filter``.
+    """
+
+    data: int = 1
+    filter: int = 1
+
+    def __post_init__(self):
+        if self.data < 1 or self.filter < 1:
+            raise ValueError(
+                f"mesh degrees must be >= 1, got data={self.data}, "
+                f"filter={self.filter}")
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.filter
+
+    @classmethod
+    def parse(cls, spec) -> "MeshSpec":
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, jax.sharding.Mesh):
+            # Only the axis SIZES are taken; build() re-materializes the
+            # mesh over default-ordered devices.  Pin specific devices by
+            # constructing the pipeline's mesh-dependent state yourself.
+            sizes = dict(zip(spec.axis_names, spec.devices.shape))
+            unknown = set(sizes) - {DATA_AXIS, FILTER_AXIS}
+            if unknown:
+                raise ValueError(
+                    f"mesh axes {sorted(unknown)} unsupported; CUTIE "
+                    f"meshes use {DATA_AXIS!r}/{FILTER_AXIS!r}")
+            return cls(data=sizes.get(DATA_AXIS, 1),
+                       filter=sizes.get(FILTER_AXIS, 1))
+        if isinstance(spec, int):
+            return cls(data=spec)
+        if isinstance(spec, dict):
+            unknown = set(spec) - {DATA_AXIS, FILTER_AXIS}
+            if unknown:
+                raise ValueError(f"unknown mesh axes {sorted(unknown)}")
+            return cls(data=int(spec.get(DATA_AXIS, 1)),
+                       filter=int(spec.get(FILTER_AXIS, 1)))
+        if isinstance(spec, (tuple, list)):
+            if len(spec) != 2:
+                raise ValueError(
+                    f"tuple mesh spec must be (data, filter), got {spec}")
+            return cls(data=int(spec[0]), filter=int(spec[1]))
+        if isinstance(spec, str):
+            sizes = {}
+            for part in spec.split(","):
+                part = part.strip()
+                if not part:
+                    continue
+                if ":" not in part:
+                    raise ValueError(
+                        f"bad mesh spec part {part!r} in {spec!r}; "
+                        "expected 'axis:N'")
+                axis, _, n = part.partition(":")
+                axis = axis.strip()
+                if axis not in (DATA_AXIS, FILTER_AXIS):
+                    raise ValueError(
+                        f"unknown mesh axis {axis!r} in {spec!r}")
+                sizes[axis] = int(n)
+            return cls(data=sizes.get(DATA_AXIS, 1),
+                       filter=sizes.get(FILTER_AXIS, 1))
+        raise TypeError(f"cannot parse a mesh spec from {type(spec).__name__}")
+
+    def build(self) -> jax.sharding.Mesh:
+        """Materialize the (data, filter) device mesh."""
+        avail = jax.device_count()
+        if self.n_devices > avail:
+            raise ValueError(
+                f"mesh {self} needs {self.n_devices} devices but jax sees "
+                f"{avail}; on CPU, set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={self.n_devices} before jax initializes")
+        return _compat.make_mesh((self.data, self.filter),
+                                 (DATA_AXIS, FILTER_AXIS))
+
+    def __str__(self) -> str:
+        return f"{DATA_AXIS}:{self.data},{FILTER_AXIS}:{self.filter}"
+
+
+# ---------------------------------------------------------------------------
+# Filter-dimension program padding + slicing
+# ---------------------------------------------------------------------------
+
+
+def _pad_thresholds(th: folding.ChannelThresholds,
+                    cout_pad: int) -> folding.ChannelThresholds:
+    """Extend per-channel thresholds with constant-zero padding channels."""
+    n = cout_pad - th.t_lo.shape[0]
+    if n == 0:
+        return th
+    return folding.ChannelThresholds(
+        t_lo=jnp.pad(th.t_lo, (0, n)),
+        t_hi=jnp.pad(th.t_hi, (0, n)),
+        flip=jnp.pad(th.flip, (0, n)),
+        const=jnp.pad(th.const, (0, n)),
+        is_const=jnp.pad(th.is_const, (0, n), constant_values=True),
+    )
+
+
+def _pad_instr(instr: engine.LayerInstr, cin_pad: int,
+               cout_pad: int) -> engine.LayerInstr:
+    """Zero-pad a layer to (cin_pad, cout_pad) channels, bit-exactly.
+
+    Padded input channels meet zero weights (no contribution to the
+    accumulator); padded output channels are constant-zero (is_const),
+    so downstream layers see exact zeros there.
+    """
+    k, _, cin, cout = instr.weights.shape
+    if (cin, cout) == (cin_pad, cout_pad):
+        return instr
+    w = jnp.pad(instr.weights,
+                ((0, 0), (0, 0), (0, cin_pad - cin), (0, cout_pad - cout)))
+    return dataclasses.replace(
+        instr, weights=w, thresholds=_pad_thresholds(instr.thresholds,
+                                                     cout_pad))
+
+
+def _slice_instr(instr: engine.LayerInstr, shard: int,
+                 n_shards: int) -> engine.LayerInstr:
+    """One device's output-channel slice of a (padded) layer."""
+    cout = instr.weights.shape[-1]
+    assert cout % n_shards == 0, (cout, n_shards)
+    cs = cout // n_shards
+    lo, hi = shard * cs, (shard + 1) * cs
+    th = instr.thresholds
+    return dataclasses.replace(
+        instr,
+        weights=instr.weights[..., lo:hi],
+        thresholds=folding.ChannelThresholds(
+            t_lo=th.t_lo[lo:hi], t_hi=th.t_hi[lo:hi], flip=th.flip[lo:hi],
+            const=th.const[lo:hi], is_const=th.is_const[lo:hi]))
+
+
+def pad_program_for_filter(program: engine.CutieProgram, n_shards: int, *,
+                           pad_input: bool = False
+                           ) -> tuple[list, int, int]:
+    """Pad every layer so each Cout divides ``n_shards``.
+
+    Each layer's Cout is rounded up to a multiple of ``n_shards``; the
+    next layer's Cin grows to match (zero weights).  With ``pad_input``
+    (used to keep uniform programs scannable), layer 0's Cin is padded
+    to its own padded Cout.  Returns ``(padded_layers,
+    input_channel_pad, final_out_channels)`` — the caller zero-pads
+    input activations by ``input_channel_pad`` channels and crops the
+    final output back to ``final_out_channels``.
+    """
+    padded, in_pad = [], 0
+    cin_pad = None
+    for i, instr in enumerate(program.layers):
+        _, _, cin, cout = instr.weights.shape
+        cout_pad = _ceil_to(cout, n_shards)
+        if i == 0:
+            cin_pad = cout_pad if (pad_input and cout_pad >= cin) else cin
+            in_pad = cin_pad - cin
+        padded.append(_pad_instr(instr, cin_pad, cout_pad))
+        cin_pad = cout_pad
+    final = program.layers[-1].weights.shape[-1] if program.layers else 0
+    return padded, in_pad, final
+
+
+# ---------------------------------------------------------------------------
+# Sharded whole-program execution
+# ---------------------------------------------------------------------------
+
+
+class ShardedExecution:
+    """shard_map'd whole-program execution strategy for a pipeline.
+
+    Owns the device mesh, the filter-padded program, and the per-device
+    lowered weight shards (one backend ``lower`` per filter shard,
+    stacked on a leading device axis that ``shard_map`` splits).  The
+    built callable has the same ``(lowered, x) -> (out, records)``
+    contract as the pipeline's single-device builder, so the pipeline's
+    jit cache and run loop are shared.
+    """
+
+    def __init__(self, program: engine.CutieProgram, backend,
+                 spec: MeshSpec, *, scan: bool = False):
+        self.spec = spec
+        self.mesh = spec.build()
+        self.backend = backend
+        f = spec.filter
+        layers, self.in_channel_pad, self.out_channels = \
+            pad_program_for_filter(program, f, pad_input=scan)
+        # Static per-shard metadata (every shard has identical shapes).
+        self.shard_instrs = [_slice_instr(l, 0, f) for l in layers]
+        # Lowered arrays: leading axis = filter shard, split by shard_map.
+        self.lowered = [
+            jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[backend.lower(_slice_instr(l, d, f))
+                           for d in range(f)])
+            for l in layers]
+        self.scannable = scan and self._shards_uniform()
+
+    def _shards_uniform(self) -> bool:
+        """Scannable after padding: identical per-shard layer shapes and
+        a carry whose channel count survives the all-gather."""
+        instrs = self.shard_instrs
+        if not instrs:
+            return False
+        shape0 = tuple(instrs[0].weights.shape)
+        for instr in instrs:
+            if (tuple(instr.weights.shape) != shape0
+                    or instr.stride != (1, 1)
+                    or not instr.padding
+                    or instr.pool is not None):
+                return False
+        # carry: Cin == gathered channels == filter_degree * shard Cout
+        return shape0[2] == self.spec.filter * shape0[3]
+
+    # -- batch/channel padding on the host ---------------------------------
+
+    def pad_inputs(self, x: Array) -> Array:
+        """Pad batch to a multiple of the data degree and input channels
+        for filter-padded layer 0; both pads are exact no-ops."""
+        n = x.shape[0]
+        n_pad = _ceil_to(max(n, 1), self.spec.data)
+        pads = [(0, n_pad - n), (0, 0), (0, 0), (0, self.in_channel_pad)]
+        if any(p != (0, 0) for p in pads):
+            x = jnp.pad(x, pads)
+        return x
+
+    def crop(self, out: Array, n: int) -> Array:
+        """Undo batch and output-channel padding."""
+        return out[:n, ..., :self.out_channels]
+
+    # -- traced program ------------------------------------------------------
+
+    def build(self):
+        """The jitted sharded whole-program callable."""
+        backend, instrs = self.backend, self.shard_instrs
+
+        def gather(y):
+            return jax.lax.all_gather(y, FILTER_AXIS, axis=-1, tiled=True)
+
+        if self.scannable:
+            instr0 = instrs[0]
+
+            def mapped(lowered, x):
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *lowered)
+
+                def body(cur, lw):
+                    shard = jax.tree.map(lambda a: a[0], lw)
+                    return gather(backend.apply(shard, cur, instr0)), {}
+
+                return jax.lax.scan(body, x, stacked)
+        else:
+            def mapped(lowered, x):
+                cur = x
+                for lw, instr in zip(lowered, instrs):
+                    shard = jax.tree.map(lambda a: a[0], lw)
+                    cur = gather(backend.apply(shard, cur, instr))
+                return cur, [{} for _ in instrs]
+
+        fn = _compat.shard_map(
+            mapped, mesh=self.mesh,
+            in_specs=([P(FILTER_AXIS)] * len(self.lowered), P(DATA_AXIS)),
+            out_specs=(P(DATA_AXIS), P()),
+            check_vma=False)       # gathered outputs are filter-replicated
+        return jax.jit(fn)
+
+    def __repr__(self) -> str:
+        return (f"ShardedExecution(mesh={self.spec}, "
+                f"backend={self.backend.name!r}, scan={self.scannable})")

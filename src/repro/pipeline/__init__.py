@@ -5,6 +5,7 @@ compiled layer FIFO drives the datapath autonomously), with stats
 collection as a first-class Tracer hook.
 """
 
+from repro.launch.cutie_mesh import MeshSpec
 from repro.pipeline.backends import (Backend, PackedBackend, PallasBackend,
                                      RefBackend, available_backends,
                                      default_backend_name, get_backend)
@@ -16,5 +17,6 @@ __all__ = [
     "Backend", "RefBackend", "PallasBackend", "PackedBackend",
     "available_backends", "default_backend_name", "get_backend",
     "CutiePipeline", "layer_out_shape", "program_shapes",
+    "MeshSpec",
     "Tracer", "StatsTracer", "SwitchingTracer",
 ]

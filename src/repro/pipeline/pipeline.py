@@ -21,6 +21,15 @@ traced execution instead of re-running the network with ad-hoc flags.
     y, rows = pipe.run(x, tracer=SwitchingTracer())   # + traced stats
     energy = pipe.measure(x)                          # priced inference
     eng = pipe.engine("deadline")                     # scheduler-driven serving
+
+Multi-device execution is a constructor knob: ``mesh=`` accepts a
+:class:`repro.launch.cutie_mesh.MeshSpec` (or any spelling its
+``parse`` takes — ``8``, ``"data:4,filter:2"``, a jax Mesh) and runs
+the whole program through ``shard_map``: data-parallel over the batch
+axis and/or filter-parallel over each layer's output-channel (OCU)
+axis, bit-identical to single-device execution.  Batch sizes and
+channel counts that don't divide the mesh are padded in and cropped
+back out transparently.
 """
 
 from __future__ import annotations
@@ -73,13 +82,24 @@ class CutiePipeline:
 
     def __init__(self, program: engine.CutieProgram,
                  backend: str | B.Backend | None = None, *,
-                 scan: bool | None = None):
+                 scan: bool | None = None, mesh=None):
         program.validate()
         self.program = program
         self.backend = B.get_backend(backend)
-        self._lowered = [self.backend.lower(i) for i in program.layers]
         uniform = _is_uniform(program)
         self.scannable = uniform if scan is None else (scan and uniform)
+        self.mesh_spec = None
+        self._sharded = None
+        if mesh is not None:
+            from repro.launch import cutie_mesh
+
+            self.mesh_spec = cutie_mesh.MeshSpec.parse(mesh)
+            self._sharded = cutie_mesh.ShardedExecution(
+                program, self.backend, self.mesh_spec, scan=self.scannable)
+            self.scannable = self._sharded.scannable
+            self._lowered = self._sharded.lowered
+        else:
+            self._lowered = [self.backend.lower(i) for i in program.layers]
         self._jit_cache: dict = {}
         self.compile_result = None     # set by compile() on the graph path
 
@@ -89,7 +109,7 @@ class CutiePipeline:
     def compile(cls, source, *,
                 instance: engine.CutieInstance = engine.GF22_SCM,
                 backend: str | B.Backend | None = None,
-                scan: bool | None = None, **compiler_options
+                scan: bool | None = None, mesh=None, **compiler_options
                 ) -> "CutiePipeline":
         """Compile a network straight into a pipeline.
 
@@ -108,7 +128,7 @@ class CutiePipeline:
         if isinstance(source, compiler.Graph):
             result = compiler.compile_graph(source, instance=instance,
                                             **compiler_options)
-            pipe = cls(result.program, backend=backend, scan=scan)
+            pipe = cls(result.program, backend=backend, scan=scan, mesh=mesh)
             pipe.compile_result = result
             return pipe
         if compiler_options:
@@ -121,7 +141,7 @@ class CutiePipeline:
             instrs.append(engine.compile_layer(w, bn, **(rest[0] if rest
                                                          else {})))
         return cls(engine.CutieProgram(instrs, instance), backend=backend,
-                   scan=scan)
+                   scan=scan, mesh=mesh)
 
     # -- introspection ------------------------------------------------------
 
@@ -144,12 +164,20 @@ class CutiePipeline:
         return program_shapes(self.program, in_shape)
 
     def __repr__(self) -> str:
+        mesh = f", mesh={self.mesh_spec}" if self.mesh_spec else ""
         return (f"CutiePipeline(layers={self.n_layers}, "
-                f"backend={self.backend_name!r}, scan={self.scannable})")
+                f"backend={self.backend_name!r}, scan={self.scannable}"
+                f"{mesh})")
 
     # -- execution ----------------------------------------------------------
 
     def _build(self, tracer: Tracer | None):
+        if self._sharded is not None:
+            if tracer is not None:
+                raise NotImplementedError(
+                    "tracers are not supported on meshed pipelines yet; "
+                    "run an unsharded pipeline for stats/energy tracing")
+            return self._sharded.build()
         backend, layers = self.backend, self.program.layers
         if self.scannable:
             instr0 = layers[0]
@@ -190,6 +218,11 @@ class CutiePipeline:
         x = jnp.asarray(x, jnp.int8)
         if x.ndim != 4:
             raise ValueError(f"expected (N, H, W, C) trits, got {x.shape}")
+        if self._sharded is not None:
+            n = x.shape[0]
+            x = self._sharded.pad_inputs(x)
+            out, _ = self._runner(x, tracer)(self._lowered, x)
+            return self._sharded.crop(out, n)
         out, recs = self._runner(x, tracer)(self._lowered, x)
         if tracer is None:
             return out

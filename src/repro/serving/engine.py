@@ -172,6 +172,7 @@ class CutieEngine:
                 "model": name, "live": report.live,
                 "padded": report.padded, "seconds": done_t - start,
                 "rows": report.rows,
+                "per_device_live": report.per_device_live,
             })
             if report.energy_uj is not None:
                 self._energy_uj += report.energy_uj * report.live
@@ -266,6 +267,28 @@ class CutieEngine:
             name: ex.n_jit_variants
             for name, ex in self.registry.items()
             if isinstance(ex, ProgramExecutor)}
+        # per-data-parallel-device occupancy, per meshed model: how full
+        # each device's batch shard ran, averaged over executed batches.
+        # Hot-swapping a model across meshes changes the device count, so
+        # only batches matching the model's current degree are averaged.
+        current_dp = {
+            name: ex.data_parallel for name, ex in self.registry.items()
+            if isinstance(ex, ProgramExecutor)}
+        per_dev: dict = {}
+        for b in self.batches:
+            pdl = b.get("per_device_live")
+            if pdl and len(pdl) == current_dp.get(b["model"]):
+                per = b["padded"] / len(pdl)
+                per_dev.setdefault(b["model"], []).append(
+                    [n / per for n in pdl])
+        per_device_occupancy = {
+            model: [float(v) for v in np.mean(rows, axis=0)]
+            for model, rows in per_dev.items()}
+        sharding = {
+            name: {"data": ex.mesh_spec.data, "filter": ex.mesh_spec.filter,
+                   "devices": ex.mesh_spec.n_devices}
+            for name, ex in self.registry.items()
+            if isinstance(ex, ProgramExecutor) and ex.mesh_spec is not None}
         return {
             "scheduler": self.scheduler.name,
             "n_requests": self._uid,
@@ -281,6 +304,8 @@ class CutieEngine:
                          if self._queue_depth else 0.0),
                 "max": max(self._queue_depth, default=0)},
             "batch_occupancy": float(np.mean(occ)) if occ else None,
+            "per_device_occupancy": per_device_occupancy or None,
+            "sharding": sharding or None,
             "deadline_met_frac": (sum(met) / len(met)) if met else None,
             "by_tag": by_tag,
             "energy_uj": self._energy_uj if self._energy_uj else None,

@@ -37,6 +37,7 @@ class ExecutionReport:
     padded: int                      # batch size actually executed
     rows: Any = None                 # tracer rows for this batch, if any
     energy_uj: Optional[float] = None  # per-inference switching energy
+    per_device_live: Optional[list] = None  # live slots per data-parallel dev
 
 
 class Executor:
@@ -80,15 +81,37 @@ class ProgramExecutor(Executor):
     per-batch rows ride back on the ExecutionReport; a SwitchingTracer
     additionally prices each batch with the calibrated energy model
     (per-inference switching energy, padding slots included).
+
+    ``mesh``: a mesh spec (see :class:`repro.launch.cutie_mesh.MeshSpec`)
+    for multi-device execution.  The pipeline is rebound onto the mesh
+    (unless it is already meshed), and every bucket is rounded up to a
+    multiple of the data-parallel degree so each executed batch splits
+    evenly across devices; per-device occupancy rides back on the
+    ExecutionReport for ``engine.stats()``.
     """
 
     def __init__(self, pipeline, *, buckets: Optional[Sequence[int]] = None,
-                 head: Optional[Callable] = None, tracer=None):
+                 head: Optional[Callable] = None, tracer=None, mesh=None):
+        if mesh is not None and getattr(pipeline, "mesh_spec", None) is None:
+            from repro.pipeline import CutiePipeline
+
+            pipeline = CutiePipeline(pipeline.program,
+                                     backend=pipeline.backend, mesh=mesh)
         self.pipeline = pipeline
-        self.buckets = tuple(sorted(set(buckets or DEFAULT_BUCKETS)))
-        if not self.buckets or self.buckets[0] < 1:
+        self.mesh_spec = getattr(pipeline, "mesh_spec", None)
+        if self.mesh_spec is not None and tracer is not None:
+            # fail at registration, not inside a later batch that would
+            # take down its batchmates (see validate()'s contract)
+            raise NotImplementedError(
+                "tracers are not supported on meshed pipelines yet; "
+                "register without mesh= to trace stats/energy")
+        self.data_parallel = self.mesh_spec.data if self.mesh_spec else 1
+        buckets = tuple(sorted(set(buckets or DEFAULT_BUCKETS)))
+        if not buckets or buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints, "
-                             f"got {self.buckets}")
+                             f"got {buckets}")
+        dp = self.data_parallel
+        self.buckets = tuple(sorted({-(-b // dp) * dp for b in buckets}))
         self.head = head
         self.tracer = tracer
         self._shape: Optional[tuple] = None      # (H, W, C), set on first submit
@@ -148,7 +171,18 @@ class ProgramExecutor(Executor):
              else feats[i])
             for i, req in enumerate(requests)]
         return ExecutionReport(completions, live, size, rows=rows,
-                               energy_uj=self._price(rows))
+                               energy_uj=self._price(rows),
+                               per_device_live=self._per_device_live(live,
+                                                                     size))
+
+    def _per_device_live(self, live: int, size: int) -> Optional[list]:
+        """Live slots landing on each data-parallel device (batch shards
+        are contiguous, so live requests fill the leading shards)."""
+        dp = self.data_parallel
+        if dp <= 1:
+            return None
+        per = size // dp
+        return [min(max(live - k * per, 0), per) for k in range(dp)]
 
     # -- internals ----------------------------------------------------------
 

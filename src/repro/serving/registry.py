@@ -28,22 +28,25 @@ class ModelRegistry:
 
     def register(self, name: str, source, *, backend=None,
                  buckets: Optional[Sequence[int]] = None, head=None,
-                 tracer=None, instance=None, **compiler_options) -> Executor:
+                 tracer=None, instance=None, mesh=None,
+                 **compiler_options) -> Executor:
         """Register ``source`` under ``name``; returns its executor.
 
-        ``backend``/``buckets``/``head``/``tracer`` configure the
-        ProgramExecutor built for program-like sources;
-        ``instance``/``compiler_options`` apply to the Graph compile
-        path only.  An Executor instance is registered as-is.
+        ``backend``/``buckets``/``head``/``tracer``/``mesh`` configure
+        the ProgramExecutor built for program-like sources (``mesh``
+        runs the model sharded over a device mesh — see
+        `repro.launch.cutie_mesh`); ``instance``/``compiler_options``
+        apply to the Graph compile path only.  An Executor instance is
+        registered as-is.
         """
         executor = self._build(source, backend=backend, buckets=buckets,
                                head=head, tracer=tracer, instance=instance,
-                               **compiler_options)
+                               mesh=mesh, **compiler_options)
         self._executors[name] = executor
         return executor
 
     def _build(self, source, *, backend, buckets, head, tracer, instance,
-               **compiler_options) -> Executor:
+               mesh=None, **compiler_options) -> Executor:
         if isinstance(source, Executor):
             return source
 
@@ -70,7 +73,7 @@ class ModelRegistry:
                     "a Graph, CompileResult, CutieProgram, CutiePipeline "
                     "or Executor")
         return ProgramExecutor(pipe, buckets=buckets, head=head,
-                               tracer=tracer)
+                               tracer=tracer, mesh=mesh)
 
     def unregister(self, name: str) -> Executor:
         if name not in self._executors:

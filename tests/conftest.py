@@ -1,7 +1,43 @@
+import os
+import sys
+
 import numpy as np
 import pytest
+
+# Multi-device tests need forced XLA host devices, and the flag only
+# takes effect if it is set before jax first initializes its backend.
+# conftest is imported before any test module, so one session-wide
+# setting here replaces the per-file subprocess/env hacks; the
+# `host_devices` fixture verifies the topology actually stuck and skips
+# with a clear reason when it could not be applied (e.g. jax was already
+# initialized by the embedding process or a plugin).
+HOST_DEVICE_COUNT = 8
+_FLAG = f"--xla_force_host_platform_device_count={HOST_DEVICE_COUNT}"
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = f"{_flags} {_FLAG}".strip()
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def host_devices() -> int:
+    """Forced host-device count, for multi-device tests.
+
+    Skips — rather than failing on a 1-device mesh error — when the
+    forced topology could not be applied to this process.
+    """
+    import jax
+
+    n = jax.device_count()
+    if n < HOST_DEVICE_COUNT:
+        pytest.skip(
+            f"needs {HOST_DEVICE_COUNT} host devices but jax sees {n}: "
+            f"jax was initialized before conftest could apply "
+            f"XLA_FLAGS {_FLAG!r} (run under plain pytest)")
+    return HOST_DEVICE_COUNT
