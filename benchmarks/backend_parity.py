@@ -1,11 +1,22 @@
-"""Backend parity + whole-program dispatch cost of the unified pipeline.
+"""Backend parity + hot-path throughput of the unified pipeline.
 
-Runs one compiled CUTIE program through every registered execution backend
-(`ref`, `pallas`, `packed`) and checks the outputs are bit-identical —
-the load-bearing property of the `CutiePipeline` redesign: one Program
-API, many micro-architectural execution modes.  Also times the jitted
-whole-program path against the layer-by-layer host loop it replaced, and
-a slot-batched serving pass over the same pipeline object.
+Runs a zoo of compiled CUTIE programs — the uniform trunk, a CIFAR-shaped
+net (7x same-width conv + 3 max-pools + avg-pool, paper Table III), a
+stride-2 downsampler, a residual-lowered graph and a TCU-width
+``pad_to``-padded graph — through every registered execution backend
+(`ref`, `pallas`, `packed`, `fused`) and **raises** unless the outputs
+are bit-identical: the load-bearing property of the pipeline redesign
+(one Program API, many micro-architectural execution modes), gated in CI
+on every PR.
+
+It then times the CIFAR-shaped program per backend.  The headline metric
+is ``fused_speedup_vs_pallas``: the fused backend runs the whole 7-layer
+trunk inside ONE Pallas megakernel (weights stationary in VMEM,
+activations ping-ponging between VMEM scratch buffers, pooling +
+thresholds fused in-register) versus the per-layer kernel launches of
+``pallas`` — the "no storing of intermediate results" claim of paper
+§III-C as a measurable speedup.  ``benchmarks/run.py --compare`` gates
+it at >= 1.5x alongside the >20% per-metric regression check.
 """
 
 from __future__ import annotations
@@ -16,99 +27,192 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compiler
 from repro.core import engine
-from repro.pipeline import (CutiePipeline, StatsTracer, available_backends)
+from repro.pipeline import (CutiePipeline, FusedBackend, StatsTracer,
+                            available_backends)
+
+#: Metrics `run.py --compare` diffs against the committed artifact
+#: (direction: "lower" = smaller is faster, "higher" = bigger is better).
+#: The gated metric is the fused-vs-pallas speedup: both sides run the
+#: same Pallas execution engine, so the ratio is stable across hosts and
+#: load (measured jitter a few %), unlike absolute ms or ratios against
+#: the XLA-conv ref path — those stay informational (INFO_METRICS) and
+#: as trajectory data in the artifact.
+THROUGHPUT_METRICS = {
+    "fused_speedup_vs_pallas": "higher",
+}
+
+#: Printed by --compare for the trajectory log, never gated.
+INFO_METRICS = {
+    "ms_per_run.ref": "lower",
+    "ms_per_run.pallas": "lower",
+    "ms_per_run.packed": "lower",
+    "ms_per_run.fused": "lower",
+    "ms_rel_ref.fused": "lower",
+}
+
+#: Boolean entries of ``res["checks"]`` that `--compare` enforces
+#: (intra-run ratios: robust to host noise, unlike absolute ms).
+SPEED_CHECKS = ("fused_speedup_ge_1p5",)
 
 
-def _program(c: int, n_layers: int, seed: int) -> engine.CutieProgram:
+def _bn(c, key):
+    return {"gamma": jax.random.normal(key, (c,)) + 0.5,
+            "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
+            "var": jnp.ones((c,))}
+
+
+def _layer(key, cin, cout, **kw):
+    k1, k2 = jax.random.split(key)
+    return engine.compile_layer(jax.random.normal(k1, (3, 3, cin, cout)),
+                                _bn(cout, k2), **kw)
+
+
+def _uniform_program(c, n_layers, seed=0):
     keys = jax.random.split(jax.random.PRNGKey(seed), n_layers)
-    instrs = []
-    for k in keys:
-        k1, k2 = jax.random.split(k)
-        w = jax.random.normal(k1, (3, 3, c, c))
-        bn = {"gamma": jax.random.normal(k2, (c,)) + 0.5,
-              "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
-              "var": jnp.ones((c,))}
-        instrs.append(engine.compile_layer(w, bn))
-    return engine.CutieProgram(instrs, engine.CutieInstance(n_i=c, n_o=c))
+    return engine.CutieProgram([_layer(k, c, c) for k in keys],
+                               engine.CutieInstance(n_i=c, n_o=c))
 
 
-def _timed(fn, reps: int = 3) -> float:
-    fn()                                   # compile / warm the jit cache
-    t0 = time.perf_counter()
+def _cifar_program(c, seed=1):
+    """The paper's Table III layout at reduced width: thermometer-fed
+    first layer (Cin != Cout), then a uniform trunk with merged pools."""
+    pools = [None, None, ("max", 2), None, ("max", 2), None, ("max", 2),
+             ("avg", 4)]
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(pools))
+    cin = (c * 15) // 16                       # 126:128 ratio of the paper
+    layers = [_layer(keys[0], cin, c, pool=pools[0])]
+    layers += [_layer(k, c, c, pool=p) for k, p in zip(keys[1:], pools[1:])]
+    return engine.CutieProgram(layers, engine.CutieInstance(n_i=c, n_o=c))
+
+
+def _stride2_program(c, seed=2):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    layers = [_layer(keys[0], c, c),
+              _layer(keys[1], c, c, stride=(2, 2)),
+              _layer(keys[2], c, c, pool=("max", 2))]
+    return engine.CutieProgram(layers, engine.CutieInstance(n_i=c, n_o=c))
+
+
+def _residual_program(seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    g = compiler.Graph(in_channels=6, in_hw=(12, 12))
+    s = g.conv(jax.random.normal(ks[0], (3, 3, 6, 20)), _bn(20, ks[3]))
+    h = g.conv(jax.random.normal(ks[1], (3, 3, 20, 20)), _bn(20, ks[4]))
+    g.add(h, s)
+    g.conv(jax.random.normal(ks[2], (3, 3, 20, 10)), _bn(10, ks[5]))
+    return compiler.compile_graph(g).program
+
+
+def _pad_to_program(seed=4):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    g = compiler.Graph(in_channels=5, in_hw=(8, 8))
+    g.conv(jax.random.normal(ks[0], (3, 3, 5, 13)), _bn(13, ks[2]))
+    g.conv(jax.random.normal(ks[1], (3, 3, 13, 13)), _bn(13, ks[3]))
+    return compiler.compile_graph(g, optimize=False, pad_to=16).program
+
+
+def _trits(seed, shape):
+    return jax.random.randint(jax.random.PRNGKey(seed), shape,
+                              -1, 2).astype(jnp.int8)
+
+
+def _timed(fn, reps: int = 10) -> float:
+    """Best-of-reps wall time: robust to shared-host scheduling noise."""
+    jax.block_until_ready(fn())            # compile / warm the jit cache
+    jax.block_until_ready(fn())
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / reps
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
-def run(c: int = 32, n_layers: int = 6, batch: int = 4, hw: int = 16,
+def run(c: int = 32, n_layers: int = 6, batch: int = 4, hw: int = 32,
         seed: int = 0) -> dict:
-    prog = _program(c, n_layers, seed)
-    x = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                           (batch, hw, hw, c), -1, 2).astype(jnp.int8)
+    uniform = _uniform_program(c, n_layers, seed)
+    programs = {
+        "uniform": (uniform, _trits(seed + 1, (batch, 16, 16, c))),
+        "cifar": (_cifar_program(c),
+                  _trits(seed + 2, (batch, hw, hw, (c * 15) // 16))),
+        "stride2": (_stride2_program(c), _trits(seed + 3, (2, 17, 17, c))),
+        "residual": (_residual_program(), _trits(seed + 4, (2, 12, 12, 6))),
+        "pad_to": (_pad_to_program(), _trits(seed + 5, (2, 8, 8, 5))),
+    }
 
-    outs, stats, times = {}, {}, {}
-    for name in available_backends():
-        pipe = CutiePipeline(prog, backend=name)
-        y, rows = pipe.run(x, tracer=StatsTracer())
-        outs[name], stats[name] = np.asarray(y), rows
-        times[name] = _timed(lambda p=pipe: p.run(x))
+    # -- bit-exactness: every backend, every program (raises -> CI gate) --
+    others = [b for b in available_backends() if b != "ref"]
+    bit_identical = {}
+    for pname, (prog, x) in programs.items():
+        ref = np.asarray(CutiePipeline(prog, backend="ref").run(x))
+        for bname in others:
+            y = np.asarray(CutiePipeline(prog, backend=bname).run(x))
+            ok = bool(np.array_equal(ref, y))
+            bit_identical[f"{pname}.{bname}"] = ok
+            if not ok:
+                raise AssertionError(
+                    f"backend {bname!r} diverges from ref on program "
+                    f"{pname!r}")
 
-    ref = outs["ref"]
-    bit_identical = {n: bool(np.array_equal(ref, o)) for n, o in outs.items()}
-    stats_identical = {n: s == stats["ref"] for n, s in stats.items()}
+    # -- tracer stats identical across backends (uniform program) ---------
+    prog, x = programs["uniform"]
+    _, ref_rows = CutiePipeline(prog, backend="ref").run(
+        x, tracer=StatsTracer())
+    stats_identical = {}
+    for bname in others:
+        _, rows = CutiePipeline(prog, backend=bname).run(
+            x, tracer=StatsTracer())
+        stats_identical[bname] = rows == ref_rows
 
-    # jitted whole-program scan vs the old per-layer host loop
-    pipe = CutiePipeline(prog, backend="ref")
-    t_scan = _timed(lambda: pipe.run(x))
+    # -- throughput on the CIFAR-shaped program ---------------------------
+    prog, x = programs["cifar"]
+    times = {}
+    for bname in available_backends():
+        pipe = CutiePipeline(prog, backend=bname)
+        times[bname] = _timed(lambda p=pipe: p.run(x))
+    speedup = times["pallas"] / times["fused"]
 
-    def host_loop():
-        cur = x
-        for instr in prog.layers:
-            cur, _ = engine.run_layer(cur, instr)
-        return cur
-
-    t_loop = _timed(host_loop)
-
-    # the same pipeline object serving slot-batched traffic
-    server = pipe.serve()
-    imgs = [np.asarray(xi) for xi in x] * 4
-    t0 = time.perf_counter()
-    for im in imgs:
-        server.submit(im)
-    results = server.run()
-    dt = time.perf_counter() - t0
-    assert len(results) == len(imgs)
+    fused = FusedBackend()
+    segments = fused.plan(prog, x.shape)
+    n_fused = sum(1 for s in segments if s.fused)
 
     return {
-        "backends": sorted(outs),
-        "scan": pipe.scannable,
+        "config": {"c": c, "n_layers": n_layers, "batch": batch, "hw": hw,
+                   "seed": seed, "programs": sorted(programs)},
+        "backends": sorted(available_backends()),
         "bit_identical": bit_identical,
         "stats_identical": stats_identical,
         "ms_per_run": {n: t * 1e3 for n, t in times.items()},
-        "ms_jitted_program": t_scan * 1e3,
-        "ms_host_layer_loop": t_loop * 1e3,
-        "serve_imgs_s": len(imgs) / dt,
-        "serve_batches": server.n_batches,
+        "ms_rel_ref": {n: t / times["ref"] for n, t in times.items()},
+        "fused_speedup_vs_pallas": speedup,
+        "cifar_segments": [[s.start, s.stop, s.fused] for s in segments],
+        "cifar_fused_trunks": n_fused,
         "checks": {
             "all_backends_bit_identical": all(bit_identical.values()),
             "all_tracer_stats_identical": all(stats_identical.values()),
+            "fused_speedup_ge_1p5": bool(speedup >= 1.5),
         },
     }
 
 
 def report(res: dict) -> str:
-    lines = ["# Backend parity — one program, three execution backends",
-             "| backend | ms/run | bit-identical | tracer stats identical |",
-             "|---|---|---|---|"]
+    lines = ["# Backend parity — one program API, four execution backends",
+             "| backend | CIFAR ms/run | tracer stats identical |",
+             "|---|---|---|"]
     for n in res["backends"]:
-        lines.append(f"| {n} | {res['ms_per_run'][n]:.1f} | "
-                     f"{res['bit_identical'][n]} | "
-                     f"{res['stats_identical'][n]} |")
+        stats = res["stats_identical"].get(n, "oracle")
+        lines.append(f"| {n} | {res['ms_per_run'][n]:.1f} | {stats} |")
+    bad = sorted(k for k, v in res["bit_identical"].items() if not v)
     lines.append(
-        f"jitted whole-program: {res['ms_jitted_program']:.1f} ms "
-        f"(scan={res['scan']}) vs host layer loop "
-        f"{res['ms_host_layer_loop']:.1f} ms; serving "
-        f"{res['serve_imgs_s']:.0f} imgs/s in {res['serve_batches']} batches")
+        f"bit-identical to ref on {len(res['bit_identical'])} "
+        f"(program, backend) pairs"
+        + (f"; FAILURES: {bad}" if bad else ""))
+    lines.append(
+        f"fused trunk speedup vs per-layer pallas: "
+        f"{res['fused_speedup_vs_pallas']:.2f}x "
+        f"({res['cifar_fused_trunks']} fused trunk(s), segments "
+        f"{res['cifar_segments']})")
     lines.append(f"checks: {res['checks']}")
     return "\n".join(lines)

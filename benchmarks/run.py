@@ -1,7 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig10,table2] [--fast]
-                                          [--smoke]
+                                          [--smoke] [--compare]
 
 Writes results/bench/<name>.json + a combined markdown report, prints
 ``name,seconds,headline`` CSV lines, and emits one repo-root
@@ -10,6 +10,19 @@ metrics, timestamp, git_sha}``) so the perf trajectory is recorded and
 CI can upload it.  --fast skips the QAT-training-heavy tables unless
 their caches exist (CI mode); --smoke asks each benchmark that supports
 it for a reduced-size run (shared-runner mode).
+
+--compare gates the perf trajectory: before overwriting a repo-root
+artifact, the committed baseline is loaded and every metric the bench
+declares in its ``THROUGHPUT_METRICS`` dict ({dotted.path: "lower" |
+"higher"}) is diffed — a >20% regression in the throughput direction
+fails the run (exit 2).  Benches should gate host-invariant ratios
+(e.g. fused-vs-pallas speedup) and list noise-prone absolute numbers in
+``INFO_METRICS`` instead, whose deltas are printed but never gate.
+Benches may also declare ``SPEED_CHECKS``: names of boolean
+``res["checks"]`` entries (intra-run ratios, robust to host noise) that
+must hold under --compare.  Baselines recorded with a different config
+(e.g. a --smoke run vs a committed full-size artifact) are skipped with
+a note instead of producing bogus deltas.
 """
 
 from __future__ import annotations
@@ -95,6 +108,78 @@ def _call_run(mod, smoke: bool) -> dict:
     return mod.run()
 
 
+# ---------------------------------------------------------------------------
+# --compare: perf-trajectory gate against the committed artifacts
+# ---------------------------------------------------------------------------
+
+REGRESSION_THRESHOLD = 0.20
+
+
+def _load_baseline(name: str):
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _metric_at(metrics: dict, path: str):
+    cur = metrics
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def compare_artifact(mod, name: str, old, res: dict
+                     ) -> tuple[list[str], list[str]]:
+    """Diff a fresh result against the committed baseline artifact.
+
+    Returns (report lines, regression descriptions).  Intra-run
+    ``SPEED_CHECKS`` are enforced unconditionally; per-metric deltas are
+    only meaningful against a baseline recorded with the same config.
+    """
+    lines, regressions = [], []
+    for key in getattr(mod, "SPEED_CHECKS", ()):
+        ok = res.get("checks", {}).get(key)
+        lines.append(f"  {name}: speed check {key} = {ok}")
+        if ok is False:
+            regressions.append(f"{name}: speed check {key} failed")
+    gated = getattr(mod, "THROUGHPUT_METRICS", {})
+    info = getattr(mod, "INFO_METRICS", {})
+    if not gated and not info:
+        return lines, regressions
+    if old is None:
+        lines.append(f"  {name}: no committed BENCH_{name}.json baseline; "
+                     "skipping metric diff")
+        return lines, regressions
+    new_config = res.get("config", {})
+    if old.get("config", {}) != new_config:
+        lines.append(f"  {name}: baseline config {old.get('config', {})} "
+                     f"!= {new_config}; skipping metric diff")
+        return lines, regressions
+    for path, direction in {**info, **gated}.items():
+        a = _metric_at(old.get("metrics", {}), path)
+        b = _metric_at({k: v for k, v in res.items() if k != "config"},
+                       path)
+        if a is None or b is None or a == 0:
+            lines.append(f"  {name}.{path}: not comparable "
+                         f"({a!r} -> {b!r})")
+            continue
+        delta = (b - a) / abs(a)
+        worse = delta > 0 if direction == "lower" else delta < 0
+        bad = path in gated and worse and abs(delta) > REGRESSION_THRESHOLD
+        lines.append(f"  {name}.{path}: {a:.4g} -> {b:.4g} ({delta:+.1%})"
+                     + ("  REGRESSION" if bad else ""))
+        if bad:
+            regressions.append(
+                f"{name}.{path}: {a:.4g} -> {b:.4g} ({delta:+.1%}, "
+                f"{direction} is better)")
+    return lines, regressions
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -102,6 +187,10 @@ def main(argv=None) -> int:
                     help="skip QAT-heavy benches without a cache")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced-size runs where supported (CI smoke)")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff fresh artifacts against the committed "
+                         "BENCH_<name>.json; >20%% throughput regression "
+                         "or a failed speed check exits non-zero")
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args(argv)
 
@@ -109,6 +198,7 @@ def main(argv=None) -> int:
     os.makedirs(args.out, exist_ok=True)
     git_sha = _git_sha()
     report_md, failures = [], []
+    compare_lines, regressions = [], []
     print("name,seconds,headline")
     for name in names:
         mod = BENCHES[name]
@@ -117,6 +207,7 @@ def main(argv=None) -> int:
             if not (cache and os.path.exists(cache)):
                 print(f"{name},0.0,skipped (--fast; no cache)")
                 continue
+        baseline = _load_baseline(name) if args.compare else None
         t0 = time.time()
         try:
             res = _call_run(mod, args.smoke)
@@ -131,12 +222,23 @@ def main(argv=None) -> int:
         write_artifact(name, res, git_sha)
         report_md.append(mod.report(res))
         print(f"{name},{dt:.1f},{_headline(name, res)}")
+        if args.compare:
+            lines, regs = compare_artifact(mod, name, baseline, res)
+            compare_lines += lines
+            regressions += regs
 
     with open(os.path.join(args.out, "REPORT.md"), "w") as f:
         f.write("\n\n".join(report_md) + "\n")
+    if args.compare and compare_lines:
+        print("perf trajectory vs committed artifacts:")
+        print("\n".join(compare_lines))
     if failures:
         print(f"{len(failures)} benchmark(s) failed: {failures}")
-    return 1 if failures else 0
+        return 1
+    if regressions:
+        print(f"{len(regressions)} throughput regression(s): {regressions}")
+        return 2
+    return 0
 
 
 if __name__ == "__main__":

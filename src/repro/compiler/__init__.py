@@ -22,10 +22,13 @@ from repro.compiler.optimize import (eliminate_dead_channels,
                                      fold_constant_thresholds,
                                      pad_program_channels)
 from repro.compiler.report import cost_table, program_cost
+from repro.compiler.trunks import (DEFAULT_VMEM_BUDGET, Trunk,
+                                   plan_segments, trunk_vmem_bytes)
 
 __all__ = [
-    "CompileResult", "CompilerOptions", "Graph", "GraphError", "Node",
-    "compile_graph", "lower_graph", "eliminate_dead_channels",
-    "fold_constant_thresholds", "pad_program_channels", "cost_table",
-    "program_cost",
+    "CompileResult", "CompilerOptions", "DEFAULT_VMEM_BUDGET", "Graph",
+    "GraphError", "Node", "Trunk", "compile_graph", "lower_graph",
+    "eliminate_dead_channels", "fold_constant_thresholds",
+    "pad_program_channels", "plan_segments", "trunk_vmem_bytes",
+    "cost_table", "program_cost",
 ]

@@ -59,6 +59,22 @@ def unpack_trits(b: Array, n: int) -> Array:
     return trits[:n].astype(jnp.int8)
 
 
+def pack_filter_rows(w: Array) -> Array:
+    """(K, K, Cin, Cout) trits -> (Cout, ceil(K*K*Cin/5)) packed rows.
+
+    Row r holds output channel r's K*K*Cin weights flattened (kh, kw, ci)-
+    major and zero-padded per row to a multiple of 5, so every row decodes
+    independently — the layout the packed conv kernel
+    (`repro.kernels.ternary_conv2d.ternary_conv2d_packed_pallas`) tiles
+    over output channels and decodes next to its taps.
+    """
+    k, _, cin, cout = w.shape
+    flat = jnp.transpose(w, (3, 0, 1, 2)).reshape(cout, k * k * cin)
+    pad = (-flat.shape[1]) % TRITS_PER_BYTE
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return pack_trits(flat.reshape(-1)).reshape(cout, -1)
+
+
 def pack_tensor(x: Array) -> tuple[Array, tuple[int, ...]]:
     """Pack an arbitrary-shape ternary tensor; returns (bytes, shape)."""
     return pack_trits(x), tuple(x.shape)

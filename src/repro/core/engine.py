@@ -300,6 +300,16 @@ def conv_out_hw(instr: LayerInstr, h: int, w: int) -> tuple[int, int]:
                          h, w)
 
 
+def layer_out_dims(k: int, stride, padding: bool, pool, h: int, w: int
+                   ) -> tuple[int, int]:
+    """Conv + merged-pool output dims — the one recurrence shared by the
+    pipeline's shape inference, the trunk planner and the trunk kernel."""
+    h, w = conv_out_dims(k, stride, padding, h, w)
+    if pool is not None:
+        h, w = h // pool[1], w // pool[1]
+    return h, w
+
+
 def dense_as_conv(w_dense: Array,
                   instance: CutieInstance = GF22_SCM) -> Array:
     """Map a ternary dense layer onto a KxK OCU weight buffer (paper §III-E).

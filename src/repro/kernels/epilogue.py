@@ -1,0 +1,92 @@
+"""Shared in-kernel OCU writeback: pool -> two-threshold -> const fixup.
+
+The single implementation of CUTIE's layer epilogue used by every Pallas
+execution path — the per-layer conv kernel (`ternary_conv2d`), its
+packed-weight variant and the fused-trunk megakernel (`fused_trunk`) all
+call :func:`layer_epilogue` on the int32 accumulator while it is still in
+registers/VMEM, so pre-threshold integers never spill to HBM:
+
+* merged pooling on the pre-threshold accumulator (paper Fig. 5: avg =
+  window sum against pre-scaled thresholds, max = max of sign(g)*z),
+* the folded two-threshold compare (paper §III-C),
+* the degenerate-channel fixup (g == 0 channels take their stored
+  per-channel constant).
+
+Bit-identical to the jnp reference pair ``engine._pool_pre_threshold`` +
+``folding.apply_thresholds``, but written kernel-safe: strided slices
+instead of 5-D window reshapes, int8 flags instead of bool arrays.
+Per-channel vectors broadcast against ``(..., C)`` accumulators, so both
+the per-layer kernels (one image per grid step) and the trunk kernel
+(whole batch) share it unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool_int(z, flip, pool):
+    """Merged pooling on int32 pre-activations z (N, OH, OW, C).
+
+    Windows that do not fit are cropped (exactly like the reference
+    ``engine._pool_pre_threshold``).  ``flip`` is the per-channel compare
+    direction (int8/bool, (C,)); max pooling pools sign(g)*z so it
+    commutes with the flipped compare.
+    """
+    kind, win = pool
+    n, oh, ow, c = z.shape
+    ph, pw = oh // win, ow // win
+    if ph == 0 or pw == 0:
+        raise ValueError(
+            f"pool window {win} exceeds the {oh}x{ow} conv output; "
+            "run CutieProgram.validate(in_shape=...) to catch this at "
+            "compile time")
+    parts = []
+    for i in range(win):                      # unrolled window taps
+        for j in range(win):
+            parts.append(jax.lax.slice(
+                z, (0, i, j, 0),
+                (n, i + win * (ph - 1) + 1, j + win * (pw - 1) + 1, c),
+                (1, win, win, 1)))            # (N, PH, PW, C)
+    if kind == "avg":
+        acc = parts[0]
+        for p in parts[1:]:
+            acc = acc + p                     # thresholds pre-scaled
+        return acc
+    sgn = jnp.where(flip != 0, -1, 1).astype(z.dtype)
+    acc = parts[0] * sgn
+    for p in parts[1:]:
+        acc = jnp.maximum(acc, p * sgn)
+    return acc * sgn
+
+
+def two_threshold(z, t_lo, t_hi, flip):
+    """Folded two-threshold ternarize of an integer accumulator."""
+    zf = z.astype(jnp.float32)
+    fl = flip != 0
+    pos = jnp.where(fl, zf < t_hi, zf > t_hi)
+    neg = jnp.where(fl, zf > t_lo, zf < t_lo)
+    return pos.astype(jnp.int8) - neg.astype(jnp.int8)
+
+
+def const_fixup(y, const, is_const):
+    """Degenerate (g == 0) channels take their stored constant trit."""
+    return jnp.where(is_const != 0, const.astype(jnp.int8), y)
+
+
+def layer_epilogue(z, t_lo, t_hi, flip, const=None, is_const=None,
+                   pool=None):
+    """Full OCU writeback: optional merged pool, compare, const channels.
+
+    ``z`` is the int32 accumulator shaped (N, OH, OW, C); the threshold
+    vectors are per-channel and broadcast on the trailing axis.  With
+    ``const is None`` the degenerate-channel fixup is skipped (legacy
+    callers that patch constants outside the kernel).
+    """
+    if pool is not None:
+        z = pool_int(z, flip, pool)
+    y = two_threshold(z, t_lo, t_hi, flip)
+    if const is not None:
+        y = const_fixup(y, const, is_const)
+    return y

@@ -1,0 +1,221 @@
+"""Fused-trunk megakernel: L uniform layers inside ONE pallas_call.
+
+CUTIE's thesis is that non-computational energy dominates, so the
+datapath is completely unrolled and "no storing of partial results"
+happens (paper §III-C) — activations flow layer to layer without ever
+leaving the chip.  The per-layer execution stack contradicts that: every
+``pallas_call`` boundary round-trips the activation tensor through HBM at
+8 bits per 1.58-bit trit.  This kernel is the software analogue of the
+ASIC's layer FIFO driving the OCU array back-to-back:
+
+* the whole trunk's ternary weights (L, K, K, C, C) are held stationary
+  in VMEM (the paper's design point — 3*3*128*128 trits x 7 layers —
+  fits comfortably),
+* activations ping-pong between two padded VMEM scratch buffers; each
+  layer reads its padded input from one, runs the completely unrolled
+  OCU window dot (every output pixel's K*K*C window against all output
+  channels at once — §III-C's "single cycle" per output), and writes the
+  next trit map into the other, so **zero** inter-layer HBM traffic
+  occurs inside the trunk,
+* the folded two-threshold epilogue, merged pre-threshold pooling and
+  the degenerate-channel fixup (`repro.kernels.epilogue`, shared with the
+  per-layer kernels) are applied in-register before the writeback.
+
+The layer loop is a Python loop unrolled at trace time, so per-layer
+spatial dims (stride / pooling shrink them monotonically) are static and
+the scratch buffers are sized once for the trunk's input.  Trunks are
+carved out of a program by ``repro.compiler.trunks.plan_segments`` under
+a VMEM budget; the ``fused`` pipeline backend stitches trunks together
+with trit-packed (5/byte) activations at the remaining HBM boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codec import TRITS_PER_BYTE, packed_size
+from repro.core.engine import conv_out_dims, layer_out_dims
+from repro.kernels import epilogue as epi
+from repro.kernels import trit_codec as C
+from repro.kernels._compat import compiler_params
+
+
+def trunk_shapes(in_hw, k: int, metas) -> list[tuple[int, int]]:
+    """Static per-layer activation dims [input, after layer 0, ...].
+
+    ``metas`` is the trunk's static layer metadata: one (stride, pool)
+    pair per layer; every trunk layer is padded (padding=True), so dims
+    shrink monotonically and the first layer's padded extent bounds all.
+    The recurrence itself is `engine.layer_out_dims` — the same one the
+    trunk planner prices scratch buffers with.
+    """
+    h, w = in_hw
+    shapes = [(h, w)]
+    for stride, pool in metas:
+        h, w = layer_out_dims(k, stride, True, pool, h, w)
+        shapes.append((h, w))
+    return shapes
+
+
+def _unpack_bytes(v, numel: int):
+    """(G,) packed bytes -> (numel,) int8 trits (codec layout, in-VMEM)."""
+    return C.unpack_digits(v).reshape(-1)[:numel].astype(jnp.int8)
+
+
+def _pack_trits(t):
+    """(5*G,) int8 trits -> (G,) packed bytes (codec layout, in-VMEM)."""
+    d = (t.astype(jnp.int32) + 1).reshape(-1, TRITS_PER_BYTE)
+    return C.pack_digits(d)
+
+
+def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
+                  isc_ref, o_ref, a_ref, b_ref, *, k: int, metas, shapes,
+                  unpack_shape, pack_out: bool):
+    """The megakernel body: unrolled layers over ping-pong scratch.
+
+    The scratch buffers carry ``cu`` channels (the trunk's zero-padded
+    common input width); every layer writes its ``c`` output channels
+    into a freshly zeroed buffer, so the cu - c spare channels stay
+    exactly zero and meet only zero weight rows downstream.
+
+    With ``unpack_shape`` the kernel input is 5-trits/byte packed bytes
+    (the previous trunk's output) decoded here in VMEM; with
+    ``pack_out`` the final trit map is packed before the writeback — so
+    the only tensor that crosses HBM between two fused trunks is the
+    packed byte stream (paper §III-A's 1.6 bits/trit on the feature-map
+    path).
+    """
+    p = k // 2
+    n, cu = a_ref.shape[0], a_ref.shape[-1]
+    c = w_ref.shape[-1]
+    h, w = shapes[0]
+    a_ref[...] = jnp.zeros(a_ref.shape, jnp.int8)   # zero halo once
+    if unpack_shape is None:
+        a_ref[:, p:p + h, p:p + w, :] = x_ref[...]
+    else:
+        numel = 1
+        for d in unpack_shape:
+            numel *= d
+        trits = _unpack_bytes(x_ref[...], numel).reshape(unpack_shape)
+        a_ref[:, p:p + h, p:p + w, :unpack_shape[-1]] = trits
+    src, dst = a_ref, b_ref
+    for l, (stride, pool) in enumerate(metas):
+        h, w = shapes[l]
+        sh, sw = stride
+        oh, ow = conv_out_dims(k, stride, True, h, w)
+        xp = src[:, :h + 2 * p, :w + 2 * p, :]      # padded view, in VMEM
+        # The completely unrolled OCU dot (paper §III-C: "each output
+        # channel value is computed in a single cycle"): gather every
+        # output pixel's K*K*C window and contract it against all output
+        # channels in ONE dot.  Accumulation runs in float32 — trit*trit
+        # partial sums are integers bounded by K*K*C (+ pool window sums,
+        # <= ~2e4) << 2^24, so every value is exactly representable and
+        # the result is bit-identical to int32 accumulation, while the
+        # whole-batch (N*OH*OW, K*K*C) gemm runs at full gemm throughput.
+        wins = [jax.lax.slice(
+            xp, (0, kh, kw, 0),
+            (n, kh + sh * (oh - 1) + 1, kw + sw * (ow - 1) + 1, cu),
+            (1, sh, sw, 1))                         # (N, OH, OW, Cu)
+            for kh in range(k) for kw in range(k)]
+        patch = jnp.concatenate(wins, axis=-1).reshape(
+            n * oh * ow, k * k * cu).astype(jnp.float32)
+        acc = jax.lax.dot_general(
+            patch, w_ref[l].reshape(k * k * cu, c).astype(jnp.float32),
+            (((1,), (0,)), ((), ())))
+        out = epi.layer_epilogue(
+            acc.reshape(n, oh, ow, c), tlo_ref[l], thi_ref[l], flip_ref[l],
+            const_ref[l], isc_ref[l], pool)         # (N, OH', OW', C) trits
+        if l == len(metas) - 1:
+            if pack_out:
+                flat = out.reshape(-1)
+                g = o_ref.shape[0]
+                pad = g * TRITS_PER_BYTE - flat.shape[0]
+                o_ref[...] = _pack_trits(jnp.pad(flat, (0, pad)))
+            else:
+                o_ref[...] = out
+        else:
+            nh, nw = shapes[l + 1]
+            dst[...] = jnp.zeros(dst.shape, jnp.int8)
+            dst[:, p:p + nh, p:p + nw, :c] = out
+            src, dst = dst, src
+
+
+def fused_trunk_pallas(x, w_stack, t_lo, t_hi, flip, const, is_const, *,
+                       metas, packed_in=None, pack_out: bool = False,
+                       interpret: bool = False):
+    """Run a trunk of L uniform padded layers in one pallas_call.
+
+    x (N, H, W, Cu) int8 trits; w_stack (L, K, K, Cu, C) int8, where C
+    is the trunk width and Cu >= C is the common input width (the head
+    layer's Cin and every layer's Cin zero-padded up to it — exact,
+    because zero weights meet zero activations).  Thresholds are stacked
+    per layer: t_lo/t_hi (L, C) float32, flip/const/is_const (L, C)
+    int8-coercible.  ``metas`` is a static tuple of (stride, pool) per
+    layer; all layers share K and C and use full zero padding (the
+    trunk-fusibility contract `plan_segments` enforces).
+
+    Trit-packed trunk boundaries: with ``packed_in=(N, H, W, Cin)`` the
+    input ``x`` is instead the (G,) uint8 byte stream a ``pack_out=True``
+    trunk produced (5 trits/byte, `repro.core.codec` layout), decoded
+    in-VMEM inside the kernel; with ``pack_out=True`` the result is the
+    packed (G,) byte stream of the final trit map.  Chaining trunks this
+    way means only packed bytes ever cross HBM between them.
+    """
+    nl, k = w_stack.shape[0], w_stack.shape[1]
+    cu, c = w_stack.shape[3], w_stack.shape[4]
+    assert cu >= c, w_stack.shape
+    assert len(metas) == nl, (len(metas), nl)
+    if packed_in is None:
+        n, h, w, xc = x.shape
+        assert xc == cu, (x.shape, cu)
+        x = x.astype(jnp.int8)
+        in_spec = pl.BlockSpec((n, h, w, cu), lambda i: (0, 0, 0, 0))
+    else:
+        n, h, w, cin = packed_in
+        assert cin <= cu, (packed_in, cu)
+        assert x.shape == (packed_size(n * h * w * cin),), (
+            x.shape, packed_in)
+        in_spec = pl.BlockSpec((x.shape[0],), lambda i: (0,))
+    p = k // 2
+    shapes = trunk_shapes((h, w), k, metas)
+    oh, ow = shapes[-1]
+
+    th = [jnp.asarray(t_lo, jnp.float32).reshape(nl, c),
+          jnp.asarray(t_hi, jnp.float32).reshape(nl, c),
+          jnp.asarray(flip).astype(jnp.int8).reshape(nl, c),
+          jnp.asarray(const).astype(jnp.int8).reshape(nl, c),
+          jnp.asarray(is_const).astype(jnp.int8).reshape(nl, c)]
+
+    if pack_out:
+        g = packed_size(n * oh * ow * c)
+        out_spec = pl.BlockSpec((g,), lambda i: (0,))
+        out_shape = jax.ShapeDtypeStruct((g,), jnp.uint8)
+    else:
+        out_spec = pl.BlockSpec((n, oh, ow, c), lambda i: (0, 0, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((n, oh, ow, c), jnp.int8)
+
+    kernel = functools.partial(
+        _trunk_kernel, k=k, metas=tuple(metas), shapes=shapes,
+        unpack_shape=tuple(packed_in) if packed_in else None,
+        pack_out=pack_out)
+    scratch = pltpu.VMEM((n, h + 2 * p, w + 2 * p, cu), jnp.int8)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            in_spec,
+            pl.BlockSpec((nl, k, k, cu, c), lambda i: (0, 0, 0, 0, 0)),
+            *[pl.BlockSpec((nl, c), lambda i: (0, 0)) for _ in th],
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[scratch, scratch],
+        compiler_params=compiler_params(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, w_stack.astype(jnp.int8), *th)

@@ -1,4 +1,4 @@
-"""Ternary KxK conv with fused two-threshold epilogue — the OCU array.
+"""Ternary KxK conv with fused OCU epilogue — the OCU array.
 
 This is the literal CUTIE regime: for the paper's design point
 (K=3, N_I=N_O=128, 32x32 feature maps) the *entire* weight tensor
@@ -13,8 +13,19 @@ at trace time — the filter-dimension unrolling of Listing 1), each tap being
 an (OH*OW, C_in) x (C_in, bco) int8 MXU dot.
 
 Layout: x NHWC (pre-padded outside), w HWIO, out NHWC.  The fused epilogue
-applies the folded thresholds (paper §III-C) so the int32 accumulator never
-leaves registers/VMEM.
+(`repro.kernels.epilogue`, shared with the fused-trunk megakernel) applies
+merged pre-threshold pooling, the folded two-threshold compare and the
+degenerate-channel fixup in-register, so neither the int32 accumulator nor
+the pooled integers ever leave registers/VMEM.
+
+Two weight layouts are supported:
+
+* :func:`ternary_conv2d_pallas` — dense int8 trits (K, K, Cin, Cout),
+* :func:`ternary_conv2d_packed_pallas` — weights stored packed at
+  5 trits/byte (paper §III-A), one byte row per output channel, decoded
+  *inside* the kernel right next to the taps that consume them (the
+  deployment path: HBM holds 1.6 bits/trit, VMEM briefly holds the tile's
+  decoded slice).
 """
 
 from __future__ import annotations
@@ -25,48 +36,78 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.codec import TRITS_PER_BYTE
+from repro.kernels import epilogue as epi
+from repro.kernels import trit_codec as C
 from repro.kernels._compat import compiler_params
 
 
-def _conv_kernel(x_ref, w_ref, *rest, k: int, stride, oh: int, ow: int,
-                 fuse_threshold: bool):
-    o_ref = rest[-1]
-    ep_refs = rest[:-1]  # no scratch: accumulator lives in registers
+def _conv_taps(xv, w_at, k: int, stride, oh: int, ow: int) -> jax.Array:
+    """Unrolled K*K taps over a padded image -> (OH*OW, bco) int32 acc.
+
+    ``xv`` is the (PH, PW, Cin) padded image; ``w_at(kh, kw)`` yields the
+    (Cin, bco) tap weights (dense read or packed-decode slice).
+    """
     sh, sw = stride
-    xv = x_ref[0]                                   # (PH, PW, Cin)
     cin = xv.shape[-1]
-    acc = jnp.zeros((oh * ow, o_ref.shape[-1]), jnp.int32)
+    acc = None
     for kh in range(k):                             # completely unrolled taps
         for kw in range(k):
             win = jax.lax.slice(
                 xv, (kh, kw, 0),
                 (kh + sh * (oh - 1) + 1, kw + sw * (ow - 1) + 1, cin),
                 (sh, sw, 1))                        # (OH, OW, Cin)
-            acc += jax.lax.dot_general(
-                win.reshape(oh * ow, cin), w_ref[kh, kw],
+            d = jax.lax.dot_general(
+                win.reshape(oh * ow, cin), w_at(kh, kw),
                 (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
-    if fuse_threshold:
-        t_lo, t_hi, flip = (r[...] for r in ep_refs)   # (1, bco)
-        z = acc.astype(jnp.float32)
-        fl = flip != 0
-        pos = jnp.where(fl, z < t_hi, z > t_hi)
-        neg = jnp.where(fl, z > t_lo, z < t_lo)
-        out = pos.astype(jnp.int8) - neg.astype(jnp.int8)
-        o_ref[0] = out.reshape(oh, ow, -1)
-    else:
+            acc = d if acc is None else acc + d
+    return acc
+
+
+def _finish(acc, o_ref, ep_refs, *, oh: int, ow: int, pool,
+            fuse_threshold: bool):
+    """Shared writeback: raw int32, or the fused epilogue to trits."""
+    if not fuse_threshold:
         o_ref[0] = acc.reshape(oh, ow, -1)
+        return
+    vecs = [r[0] for r in ep_refs]                  # (bco,) each
+    t_lo, t_hi, flip = vecs[:3]
+    const, is_const = vecs[3:] if len(vecs) == 5 else (None, None)
+    z = acc.reshape(1, oh, ow, acc.shape[-1])
+    out = epi.layer_epilogue(z, t_lo, t_hi, flip, const, is_const, pool)
+    o_ref[...] = out
 
 
-def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
-                          t_lo=None, t_hi=None, flip=None,
-                          bco: int = 128, interpret: bool = False):
-    """NHWC trit conv.  x (N,H,W,Cin) int8, w (K,K,Cin,Cout) int8.
+def _conv_kernel(x_ref, w_ref, *rest, k: int, stride, oh: int, ow: int,
+                 fuse_threshold: bool, pool):
+    o_ref = rest[-1]
+    ep_refs = rest[:-1]  # no scratch: accumulator lives in registers
+    acc = _conv_taps(x_ref[0], lambda kh, kw: w_ref[kh, kw], k, stride,
+                     oh, ow)
+    _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
+            fuse_threshold=fuse_threshold)
 
-    Fused thresholds (t_lo/t_hi/flip per Cout) produce int8 trits; without
-    them the raw int32 pre-activations are returned.
-    """
-    n, h, wd, cin = x.shape
-    k, _, _, cout = w.shape
+
+def _packed_conv_kernel(x_ref, wp_ref, *rest, k: int, cin: int, stride,
+                        oh: int, ow: int, pool):
+    """Conv with the 5-trits/byte decode fused in front of the taps."""
+    o_ref = rest[-1]
+    ep_refs = rest[:-1]
+    trits = C.unpack_digits(wp_ref[...])            # (bco, G, 5)
+    w_rows = trits.reshape(trits.shape[0], -1)[:, :k * k * cin]
+
+    def w_at(kh, kw):
+        off = (kh * k + kw) * cin
+        return w_rows[:, off:off + cin].astype(jnp.int8).T   # (Cin, bco)
+
+    acc = _conv_taps(x_ref[0], w_at, k, stride, oh, ow)
+    _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
+            fuse_threshold=bool(ep_refs))
+
+
+def _geometry(x, k: int, stride, padding: bool):
+    """Pad the input and compute conv output dims (shared by both layouts)."""
+    _, h, wd, _ = x.shape
     sh, sw = stride
     if padding:
         p = k // 2
@@ -75,23 +116,61 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
     else:
         oh = (h - k) // sh + 1
         ow = (wd - k) // sw + 1
+    return x, oh, ow
+
+
+def _epilogue_operands(cout: int, t_lo, t_hi, flip, const, is_const, pool,
+                       oh: int, ow: int):
+    """Stack the per-channel epilogue vectors + the blocked output shape.
+
+    Returns (operands, out_dims, out_dtype): 3 vectors (legacy compare-only
+    epilogue) or 5 (with the degenerate-channel fixup); pooling shrinks the
+    output dims and requires the fused epilogue.
+    """
+    fuse = t_lo is not None
+    if pool is not None and not fuse:
+        raise ValueError("merged pooling requires the fused threshold "
+                         "epilogue (t_lo/t_hi/flip)")
+    if not fuse:
+        return [], (oh, ow), jnp.int32
+    ep = [jnp.asarray(t_lo, jnp.float32).reshape(1, cout),
+          jnp.asarray(t_hi, jnp.float32).reshape(1, cout),
+          jnp.asarray(flip).astype(jnp.int8).reshape(1, cout)]
+    if const is not None:
+        ep += [jnp.asarray(const).astype(jnp.int8).reshape(1, cout),
+               jnp.asarray(is_const).astype(jnp.int8).reshape(1, cout)]
+    if pool is not None:
+        win = pool[1]
+        oh, ow = oh // win, ow // win
+    return ep, (oh, ow), jnp.int8
+
+
+def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
+                          t_lo=None, t_hi=None, flip=None,
+                          const=None, is_const=None, pool=None,
+                          bco: int = 128, interpret: bool = False):
+    """NHWC trit conv.  x (N,H,W,Cin) int8, w (K,K,Cin,Cout) int8.
+
+    Fused thresholds (t_lo/t_hi/flip per Cout) produce int8 trits; adding
+    const/is_const also resolves degenerate (g == 0) channels in-kernel,
+    and ``pool=("max"|"avg", win)`` applies merged pooling on the int32
+    accumulator before the compare (paper Fig. 5).  Without thresholds the
+    raw int32 pre-activations are returned.
+    """
+    n, _, _, cin = x.shape
+    k, _, _, cout = w.shape
+    x, oh, ow = _geometry(x, k, stride, padding)
     ph, pw = x.shape[1], x.shape[2]
     bco = min(bco, cout)
     assert cout % bco == 0
 
-    fuse = t_lo is not None
-    if fuse:
-        ep = [jnp.asarray(t_lo, jnp.float32).reshape(1, cout),
-              jnp.asarray(t_hi, jnp.float32).reshape(1, cout),
-              jnp.asarray(flip).astype(jnp.int8).reshape(1, cout)]
-        out_dtype = jnp.int8
-    else:
-        ep, out_dtype = [], jnp.int32
+    ep, (po, pq), out_dtype = _epilogue_operands(
+        cout, t_lo, t_hi, flip, const, is_const, pool, oh, ow)
     ep_specs = [pl.BlockSpec((1, bco), lambda i, j: (0, j)) for _ in ep]
 
     kernel = functools.partial(
-        _conv_kernel, k=k, stride=(sh, sw), oh=oh, ow=ow,
-        fuse_threshold=fuse)
+        _conv_kernel, k=k, stride=stride, oh=oh, ow=ow,
+        fuse_threshold=bool(ep), pool=pool)
 
     return pl.pallas_call(
         kernel,
@@ -101,9 +180,54 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
             pl.BlockSpec((k, k, cin, bco), lambda i, j: (0, 0, 0, j)),
             *ep_specs,
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, bco), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cout), out_dtype),
+        out_specs=pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype),
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x.astype(jnp.int8), w.astype(jnp.int8), *ep)
+
+
+def ternary_conv2d_packed_pallas(x, w_packed, *, k: int, cin: int,
+                                 stride=(1, 1), padding=True,
+                                 t_lo=None, t_hi=None, flip=None,
+                                 const=None, is_const=None, pool=None,
+                                 bco: int = 128, interpret: bool = False):
+    """Conv from packed weights: decode happens next to the compute.
+
+    ``w_packed`` is (Cout, G) uint8 — each row one output channel's
+    K*K*Cin weights at 5 trits/byte (`repro.core.codec.pack_filter_rows`).
+    The kernel decodes its Cout tile in VMEM and runs the same taps +
+    fused epilogue as the dense kernel; the dense weight tensor never
+    exists outside the kernel.
+    """
+    n = x.shape[0]
+    cout, g = w_packed.shape
+    assert g * TRITS_PER_BYTE >= k * k * cin, (g, k, cin)
+    x, oh, ow = _geometry(x, k, stride, padding)
+    ph, pw = x.shape[1], x.shape[2]
+    bco = min(bco, cout)
+    assert cout % bco == 0
+
+    ep, (po, pq), out_dtype = _epilogue_operands(
+        cout, t_lo, t_hi, flip, const, is_const, pool, oh, ow)
+    ep_specs = [pl.BlockSpec((1, bco), lambda i, j: (0, j)) for _ in ep]
+
+    kernel = functools.partial(
+        _packed_conv_kernel, k=k, cin=cin, stride=stride, oh=oh, ow=ow,
+        pool=pool)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n, cout // bco),
+        in_specs=[
+            pl.BlockSpec((1, ph, pw, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bco, g), lambda i, j: (j, 0)),
+            *ep_specs,
+        ],
+        out_specs=pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x.astype(jnp.int8), w_packed, *ep)

@@ -20,24 +20,46 @@ from repro.kernels._compat import compiler_params
 TRITS_PER_BYTE = 5
 
 
-def _pack_kernel(t_ref, o_ref):
-    t = t_ref[...].astype(jnp.int32) + 1            # (br, 5*bg) digits
-    r, kg = t.shape
-    d = t.reshape(r, kg // TRITS_PER_BYTE, TRITS_PER_BYTE)
+def pack_digits(d):
+    """(..., 5) trit digits in 0..2 -> (...) packed uint8 bytes.
+
+    The one kernel-safe base-3 encoder (unrolled Horner, little-endian),
+    shared by every in-kernel packing site: this module's pack kernel,
+    and the fused-trunk boundary epilogue.  Must stay the exact inverse
+    of :func:`unpack_digits` and bit-compatible with
+    `repro.core.codec.pack_trits`.
+    """
     acc = d[..., 0]
     for i, p in enumerate((3, 9, 27, 81)):          # unrolled base-3 horner
         acc = acc + d[..., i + 1] * p
-    o_ref[...] = acc.astype(jnp.uint8)
+    return acc.astype(jnp.uint8)
 
 
-def _unpack_kernel(b_ref, o_ref):
-    v = b_ref[...].astype(jnp.int32)                # (br, bg)
+def unpack_digits(v):
+    """(...) packed bytes -> (..., 5) int trits in {-1, 0, 1}.
+
+    The one kernel-safe base-3 decoder, shared by this module's unpack
+    kernel, the packed-weight conv kernel and the fused-trunk boundary
+    prologue.
+    """
+    v = v.astype(jnp.int32)
     digits = []
     for _ in range(TRITS_PER_BYTE):
         digits.append(v % 3)
         v = v // 3
-    d = jnp.stack(digits, axis=-1) - 1              # (br, bg, 5)
-    o_ref[...] = d.reshape(v.shape[0], -1).astype(jnp.int8)
+    return jnp.stack(digits, axis=-1) - 1
+
+
+def _pack_kernel(t_ref, o_ref):
+    t = t_ref[...].astype(jnp.int32) + 1            # (br, 5*bg) digits
+    r, kg = t.shape
+    d = t.reshape(r, kg // TRITS_PER_BYTE, TRITS_PER_BYTE)
+    o_ref[...] = pack_digits(d)
+
+
+def _unpack_kernel(b_ref, o_ref):
+    d = unpack_digits(b_ref[...])                   # (br, bg, 5)
+    o_ref[...] = d.reshape(d.shape[0], -1).astype(jnp.int8)
 
 
 def pack_trits_pallas(t, *, br: int = 256, bg: int = 128,

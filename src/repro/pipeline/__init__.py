@@ -6,8 +6,9 @@ collection as a first-class Tracer hook.
 """
 
 from repro.launch.cutie_mesh import MeshSpec
-from repro.pipeline.backends import (Backend, PackedBackend, PallasBackend,
-                                     RefBackend, available_backends,
+from repro.pipeline.backends import (Backend, FusedBackend, PackedBackend,
+                                     PallasBackend, RefBackend,
+                                     available_backends,
                                      default_backend_name, get_backend)
 from repro.pipeline.pipeline import (CutiePipeline, layer_out_shape,
                                      program_shapes)
@@ -15,6 +16,7 @@ from repro.pipeline.tracer import StatsTracer, SwitchingTracer, Tracer
 
 __all__ = [
     "Backend", "RefBackend", "PallasBackend", "PackedBackend",
+    "FusedBackend",
     "available_backends", "default_backend_name", "get_backend",
     "CutiePipeline", "layer_out_shape", "program_shapes",
     "MeshSpec",

@@ -4,20 +4,32 @@ A backend maps each compiled :class:`repro.core.engine.LayerInstr` onto an
 executable representation once at pipeline-construction time (``lower``) and
 then runs it inside the jitted program (``apply``).  All backends share one
 layer epilogue (merged pooling on pre-threshold integers + the folded
-two-threshold compare), so their trit outputs are bit-identical — the same
-compiled program runs on any of them, like the ASIC's layer FIFO driving
-different micro-architectural implementations of the OCU array.
+two-threshold compare + the degenerate-channel fixup), so their trit
+outputs are bit-identical — the same compiled program runs on any of them,
+like the ASIC's layer FIFO driving different micro-architectural
+implementations of the OCU array.
 
 Backends:
 
 * ``ref``    — ``lax.conv_general_dilated`` int32 oracle (fast on CPU),
 * ``pallas`` — the weight-stationary Pallas OCU-array kernel
-  (`repro.kernels.ternary_conv2d`); interpret mode off-TPU.  Layers without
-  merged pooling use the kernel's fused threshold epilogue, so the int32
-  accumulator never leaves VMEM,
+  (`repro.kernels.ternary_conv2d`); interpret mode off-TPU.  The whole
+  layer epilogue (pooling, thresholds, constant channels) runs inside the
+  kernel, so the int32 accumulator never leaves VMEM — pool layers
+  included,
 * ``packed`` — weights stored packed at 5 trits/byte
-  (`repro.kernels.trit_codec`, paper §III-A) and decoded next to the
-  compute; the deployment/HBM-compression path.
+  (`repro.kernels.trit_codec` layout, paper §III-A) and decoded *inside*
+  the conv kernel next to the taps that consume them; the deployment/HBM-
+  compression path,
+* ``fused``  — trunk-fused execution: maximal runs of uniform layers
+  (`repro.compiler.trunks.plan_segments`) execute inside ONE Pallas
+  megakernel (`repro.kernels.fused_trunk`) with all weights stationary in
+  VMEM and activations ping-ponging between two VMEM scratch buffers, so
+  zero inter-layer HBM traffic occurs inside a trunk; the residual
+  inter-trunk activations travel trit-packed at 5/byte.  Non-fusible
+  layers fall back to the per-layer kernel; traced runs (Tracer hooks
+  need every intermediate activation) execute per-layer too, so stats
+  stay identical across backends.
 
 Selection: by name via :func:`get_backend`, or auto-detected (``pallas`` on
 TPU, else ``ref``); the ``REPRO_PIPELINE_BACKEND`` env var overrides.
@@ -26,6 +38,7 @@ TPU, else ``ref``); the ``REPRO_PIPELINE_BACKEND`` env var overrides.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 from typing import Any
 
@@ -37,7 +50,9 @@ from repro.core import codec, engine, folding
 Array = jax.Array
 
 
+@functools.lru_cache(maxsize=1)
 def _on_tpu() -> bool:
+    """Probe the default jax platform once; device topology is static."""
     try:
         return jax.devices()[0].platform == "tpu"
     except Exception:  # noqa: BLE001 — no devices at all
@@ -58,6 +73,11 @@ class Backend:
     stacked and scanned); static metadata stays on the LayerInstr, which
     ``apply`` receives alongside.  ``apply`` must be traceable and must
     produce trit outputs bit-identical to the ``ref`` backend.
+
+    Backends may additionally implement ``build_program(program,
+    in_shape)`` returning a traceable ``fn(lowered, x) -> (out, recs)``
+    that executes the *whole* program; the pipeline prefers it for
+    untraced runs (Tracer hooks require per-layer boundaries).
     """
 
     name: str = "?"
@@ -85,7 +105,7 @@ class RefBackend(Backend):
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend(Backend):
-    """Weight-stationary Pallas OCU-array conv (fused epilogue when legal)."""
+    """Weight-stationary Pallas OCU-array conv, fully fused epilogue."""
 
     interpret: bool = dataclasses.field(default_factory=lambda: not _on_tpu())
     name: str = dataclasses.field(default="pallas", init=False)
@@ -97,53 +117,125 @@ class PallasBackend(Backend):
         from repro.kernels import ternary_conv2d as K
 
         th: folding.ChannelThresholds = lowered["th"]
-        if instr.pool is None:
-            # Fused path: two-threshold compare inside the kernel epilogue.
-            # Degenerate (g == 0) channels are not representable there; fix
-            # them up with the stored per-channel constant.
-            y = K.ternary_conv2d_pallas(
-                x, lowered["w"], stride=instr.stride, padding=instr.padding,
-                t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
-                interpret=self.interpret)
-            return jnp.where(th.is_const, th.const, y)
-        z = K.ternary_conv2d_pallas(
+        return K.ternary_conv2d_pallas(
             x, lowered["w"], stride=instr.stride, padding=instr.padding,
+            t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
+            const=th.const, is_const=th.is_const, pool=instr.pool,
             interpret=self.interpret)
-        return _finish_layer(z, instr._replace_thresholds(th))
 
 
 @dataclasses.dataclass(frozen=True)
 class PackedBackend(Backend):
-    """Weights live packed (5 trits/byte) and are decoded next to compute."""
+    """Weights live packed (5 trits/byte); the conv kernel decodes them."""
 
     interpret: bool = dataclasses.field(default_factory=lambda: not _on_tpu())
     name: str = dataclasses.field(default="packed", init=False)
 
     def lower(self, instr):
-        flat = instr.weights.reshape(-1)
-        return {"wp": codec.pack_trits(flat), "th": instr.thresholds}
-
-    def _decode(self, wp: Array, shape: tuple[int, ...]) -> Array:
-        from repro.kernels import trit_codec as C
-
-        n = 1
-        for d in shape:
-            n *= d
-        g = wp.shape[0]
-        trits = C.unpack_trits_pallas(wp.reshape(1, g), br=1, bg=g,
-                                      interpret=self.interpret)
-        return trits.reshape(-1)[:n].reshape(shape)
+        return {"wp": codec.pack_filter_rows(instr.weights),
+                "th": instr.thresholds}
 
     def apply(self, lowered, x, instr):
-        w = self._decode(lowered["wp"], tuple(instr.weights.shape))
-        z = engine.conv2d_int(x, w, instr.stride, instr.padding)
-        return _finish_layer(z, instr._replace_thresholds(lowered["th"]))
+        from repro.kernels import ternary_conv2d as K
+
+        th: folding.ChannelThresholds = lowered["th"]
+        k, _, cin, _ = instr.weights.shape
+        return K.ternary_conv2d_packed_pallas(
+            x, lowered["wp"], k=k, cin=cin, stride=instr.stride,
+            padding=instr.padding, t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
+            const=th.const, is_const=th.is_const, pool=instr.pool,
+            interpret=self.interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedBackend(PallasBackend):
+    """Trunk-fused execution: one megakernel per run of uniform layers.
+
+    ``vmem_budget`` (bytes) bounds each trunk's on-chip residency
+    (default `repro.compiler.trunks.DEFAULT_VMEM_BUDGET`);
+    ``pack_boundaries`` makes consecutive fused trunks exchange their
+    activations as 5-trits/byte packed bytes — the producer packs in
+    its epilogue, the consumer decodes in its prologue, so the tensor
+    crossing HBM between them is 5x smaller than int8 trits (boundaries
+    that touch a per-layer segment stay dense).  Per-layer execution
+    (such segments, traced runs, meshed pipelines) inherits the fully
+    fused PallasBackend kernel, so both paths share one epilogue
+    implementation.
+    """
+
+    vmem_budget: int | None = None
+    pack_boundaries: bool = True
+    name: str = dataclasses.field(default="fused", init=False)
+
+    def plan(self, program: engine.CutieProgram, in_shape):
+        from repro.compiler import trunks
+
+        return trunks.plan_segments(program, in_shape, self.vmem_budget)
+
+    def build_program(self, program: engine.CutieProgram, in_shape):
+        from repro.compiler import trunks
+        from repro.kernels import fused_trunk as FT
+
+        segments = self.plan(program, in_shape)
+        layers = program.layers
+        metas = {seg: tuple((layers[i].stride, layers[i].pool)
+                            for i in range(seg.start, seg.stop))
+                 for seg in segments if seg.fused}
+        # Per-trunk common input width: the head's Cin and the trunk
+        # width C zero-padded to max(Cin, C) — exact, zero weights only
+        # ever meet zero activations.
+        cus = {seg: trunks.trunk_cin(layers[seg.start:seg.stop])
+               for seg in segments if seg.fused}
+        # fused->fused boundaries exchange packed bytes (kernel-side
+        # pack/unpack); each consumer needs its logical input shape.
+        hw = trunks.segment_shapes(layers, in_shape[1:3])
+        packed_after = [self.pack_boundaries and a.fused and b.fused
+                        for a, b in zip(segments, segments[1:])] + [False]
+
+        def pad_ch(a, cu, axis):
+            n = cu - a.shape[axis]
+            if n == 0:
+                return a
+            pads = [(0, 0)] * a.ndim
+            pads[axis] = (0, n)
+            return jnp.pad(a, pads)
+
+        def fn(lowered, x):
+            cur = x
+            for si, seg in enumerate(segments):
+                if seg.fused:
+                    rng = range(seg.start, seg.stop)
+                    cu = cus[seg]
+                    ws = jnp.stack([pad_ch(lowered[i]["w"], cu, 2)
+                                    for i in rng])
+                    th = [jnp.stack([getattr(lowered[i]["th"], f)
+                                     for i in rng])
+                          for f in ("t_lo", "t_hi", "flip", "const",
+                                    "is_const")]
+                    if si > 0 and packed_after[si - 1]:
+                        h, w = hw[seg.start]
+                        packed_in = (in_shape[0], h, w,
+                                     layers[seg.start].weights.shape[2])
+                    else:
+                        packed_in = None
+                        cur = pad_ch(cur, cu, 3)
+                    cur = FT.fused_trunk_pallas(
+                        cur, ws, *th, metas=metas[seg],
+                        packed_in=packed_in, pack_out=packed_after[si],
+                        interpret=self.interpret)
+                else:
+                    for i in range(seg.start, seg.stop):
+                        cur = self.apply(lowered[i], cur, layers[i])
+            return cur, []
+
+        return fn
 
 
 _REGISTRY = {
     "ref": RefBackend,
     "pallas": PallasBackend,
     "packed": PackedBackend,
+    "fused": FusedBackend,
 }
 
 

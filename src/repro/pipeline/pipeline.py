@@ -5,10 +5,12 @@ into the layer FIFO once, then let the datapath run the whole program
 autonomously with the host asleep.  `CutiePipeline` is that model for the
 framework: it owns a compiled :class:`CutieProgram`, an execution
 :class:`~repro.pipeline.backends.Backend` (``ref`` | ``pallas`` |
-``packed``), and runs the *whole program* as a single jitted computation —
-a ``lax.scan`` over the stacked layer FIFO when the program is uniform
-(the CUTIE-CNN case: stride-1, padded, constant-channel trunk), an
-unrolled-in-trace loop otherwise.  There is no per-layer host round-trip.
+``packed`` | ``fused``), and runs the *whole program* as a single jitted
+computation — the backend's own program-level build when it has one (the
+``fused`` backend's trunk megakernels), else a ``lax.scan`` over the
+stacked layer FIFO when the program is uniform (the CUTIE-CNN case:
+stride-1, padded, constant-channel trunk), an unrolled-in-trace loop
+otherwise.  There is no per-layer host round-trip.
 
 Stats collection is a first-class :class:`~repro.pipeline.tracer.Tracer`
 hook: the tracer's traced half runs inside the same jitted program, so the
@@ -171,13 +173,20 @@ class CutiePipeline:
 
     # -- execution ----------------------------------------------------------
 
-    def _build(self, tracer: Tracer | None):
+    def _build(self, tracer: Tracer | None, in_shape=None):
         if self._sharded is not None:
             if tracer is not None:
                 raise NotImplementedError(
                     "tracers are not supported on meshed pipelines yet; "
                     "run an unsharded pipeline for stats/energy tracing")
             return self._sharded.build()
+        if (tracer is None and in_shape is not None
+                and hasattr(self.backend, "build_program")):
+            # Program-level execution (e.g. the fused backend's trunk
+            # megakernels).  Tracer runs need every per-layer boundary,
+            # so they stay on the scan/unrolled paths below.
+            return jax.jit(self.backend.build_program(self.program,
+                                                      tuple(in_shape)))
         backend, layers = self.backend, self.program.layers
         if self.scannable:
             instr0 = layers[0]
@@ -206,7 +215,7 @@ class CutiePipeline:
     def _runner(self, x: Array, tracer: Tracer | None):
         key = (x.shape, str(x.dtype), tracer.cache_key if tracer else None)
         if key not in self._jit_cache:
-            self._jit_cache[key] = self._build(tracer)
+            self._jit_cache[key] = self._build(tracer, x.shape)
         return self._jit_cache[key]
 
     def run(self, x, tracer: Tracer | None = None):
