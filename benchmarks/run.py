@@ -37,9 +37,9 @@ import time
 import traceback
 
 from benchmarks import (backend_parity, compiler_report, fig6_channels,
-                        fig10_switching, fig11_energy, roofline_report,
-                        serving_load, sharding_scaling, table2_tiling,
-                        table4_strategies, table5_sota)
+                        fig10_switching, fig11_energy, llm_serving,
+                        roofline_report, serving_load, sharding_scaling,
+                        table2_tiling, table4_strategies, table5_sota)
 
 HEAVY = {"table4", "fig11", "compiler"}
 
@@ -55,6 +55,7 @@ BENCHES = {
     "compiler": compiler_report,
     "serving": serving_load,
     "sharding": sharding_scaling,
+    "llm_serving": llm_serving,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -320,3 +320,121 @@ def _prefill_dense_body(carry, lp, *, cfg, positions, max_len, unroll):
     kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
     vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return h + y, (kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# Prefix-aware prefill (paged serving runtime)
+# ---------------------------------------------------------------------------
+
+
+def _suffix_attn_block(lp, h, prefix_k, prefix_v, positions, n_cached,
+                       cfg, unroll, ffn):
+    """One transformer block over *suffix* positions against cached
+    prefix KV.
+
+    ``prefix_k/v (B, C, Hk, Dh)`` hold the post-rope rows for absolute
+    positions ``0..C-1`` (exactly what the cache stores), so attention
+    over ``concat(prefix, suffix)`` with ``q_offset=C`` reproduces the
+    full-prompt computation for every suffix row — the suffix queries
+    see identical keys at identical positions.
+    """
+    xa = TF._norm(cfg, lp["ln1"], h)
+    q, k, v = attn._project_qkv(lp["attn"], xa, cfg, positions, True)
+    kf = jnp.concatenate([prefix_k.astype(q.dtype), k], axis=1)
+    vf = jnp.concatenate([prefix_v.astype(q.dtype), v], axis=1)
+    g = cfg.n_heads // cfg.n_kv
+    kr = jnp.repeat(kf, g, axis=2) if g > 1 else kf
+    vr = jnp.repeat(vf, g, axis=2) if g > 1 else vf
+    mode = attn.attn_mode(cfg.n_heads, cfg.n_kv)
+    qs, kr, vr = attn._shard_qkv(q, kr, vr, mode, kv_shardable=True)
+    out = attn.flash_attention(
+        qs, kr, vr, causal=True, q_chunk=cfg.attn_q_chunk,
+        kv_chunk=cfg.attn_kv_chunk, unroll=unroll, q_offset=n_cached,
+        bf16_scores=cfg.attn_bf16_scores)
+    if mode == "heads":
+        out = shard(out, BATCH, None, MODEL, None)
+    else:
+        out = shard(out, BATCH, MODEL, None, None)
+    b, s = out.shape[:2]
+    a = C.linear(lp["attn"]["wo"], out.reshape(b, s, -1), quant=cfg.quant)
+    h = h + shard(a, BATCH, None, None)
+    y = ffn(lp, TF._norm(cfg, lp["ln2"], h))
+    return h + y, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+
+def prefill_with_prefix(p, tokens, prefix_kv, cfg: ArchConfig, *,
+                        unroll=False):
+    """Prefill only the *suffix* of a prompt whose first ``C`` tokens'
+    KV rows were served by the prefix cache.
+
+    tokens (B, S) are the suffix tokens at absolute positions
+    ``C .. C+S-1``; ``prefix_kv = {"k"/"v": (L, B, C, Hk, Dh)}`` is the
+    gathered cached prefix (C may be 0).  Returns
+    ``(logits (B, S, V), suffix kv (L, B, S, Hk, Dh))`` — all suffix
+    logits, so bucket-padded callers can pick row ``n_real - 1``.
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            f"prefix prefill is attention-family only, got {cfg.family}")
+    b, s = tokens.shape
+    n_cached = prefix_kv["k"].shape[2]
+    positions = n_cached + jnp.arange(s)[None]
+    x = TF._embed(p, tokens, cfg)
+
+    def moe_ffn(lp, xn):
+        if cfg.family == "moe" and "moe" in lp:
+            y, _ = moe.apply(lp["moe"], xn, cfg)
+            return y
+        return mlp.apply(lp["mlp"], xn, cfg)
+
+    def body(carry, inp):
+        lp, pk, pv = inp
+        return _suffix_attn_block(lp, carry, pk, pv, positions, n_cached,
+                                  cfg, unroll, moe_ffn)
+
+    pk, pv = prefix_kv["k"], prefix_kv["v"]
+    if cfg.family == "moe" and cfg.first_dense:
+        nd = cfg.first_dense
+        dense_cfg = cfg.replace(d_ff=cfg.d_ff or 4 * cfg.d_model)
+
+        def dense_body(carry, inp):
+            lp, dk, dv = inp
+            ffn = lambda lp_, xn: mlp.apply(lp_["mlp"], xn, dense_cfg)  # noqa: E731
+            return _suffix_attn_block(lp, carry, dk, dv, positions,
+                                      n_cached, dense_cfg, unroll, ffn)
+
+        x, (kd, vd) = maybe_scan(
+            dense_body, x, (p["dense_layers"], pk[:nd], pv[:nd]),
+            unroll=unroll)
+        x, (km, vm) = maybe_scan(
+            body, x, (p["layers"], pk[nd:], pv[nd:]), unroll=unroll)
+        k = jnp.concatenate([kd, km])
+        v = jnp.concatenate([vd, vm])
+    else:
+        x, (k, v) = maybe_scan(body, x, (p["layers"], pk, pv),
+                               unroll=unroll)
+
+    x = TF._norm(cfg, p["ln_f"], x)
+    logits = x @ TF.head_weight(p, cfg)
+    return shard(logits, BATCH, None, MODEL), {"k": k, "v": v}
+
+
+def ssm_prefill(p, tokens, caches, cfg: ArchConfig, start_pos=0):
+    """Prefill an SSM/hybrid model by scanning the decode step.
+
+    tokens (B, S); ``caches`` is a decode cache pytree (possibly restored
+    from a prefix snapshot covering positions ``< start_pos``).  Returns
+    ``(logits (B, S, V), final caches)``.  One jitted variant per S; the
+    scan keeps compile time flat in S.
+    """
+    def step(carry, inp):
+        caches = carry
+        i, tok = inp
+        logits, caches = decode_step(p, tok[:, None], caches,
+                                     start_pos + i, cfg)
+        return caches, logits[:, 0]
+
+    s = tokens.shape[1]
+    caches, logits = jax.lax.scan(
+        step, caches, (jnp.arange(s), jnp.moveaxis(tokens, 1, 0)))
+    return jnp.moveaxis(logits, 0, 1), caches

@@ -96,6 +96,21 @@ class CutiePipeline:
             from repro.launch import cutie_mesh
 
             self.mesh_spec = cutie_mesh.MeshSpec.parse(mesh)
+            if hasattr(self.backend, "build_program"):
+                # Sharded execution is per-layer shard_map; a program-level
+                # backend build (fused trunk megakernels) cannot run under
+                # it yet, so the mesh path silently ran per-layer.  Make
+                # that drop explicit — see execution_plan() for the path
+                # actually chosen.
+                import warnings
+
+                warnings.warn(
+                    f"backend {self.backend.name!r} builds whole-program "
+                    "megakernels, but mesh= execution is per-layer "
+                    "shard_map: the program-level build is dropped on "
+                    "this mesh (fused trunks do not shard yet). Check "
+                    "pipe.execution_plan() for the chosen path.",
+                    UserWarning, stacklevel=2)
             self._sharded = cutie_mesh.ShardedExecution(
                 program, self.backend, self.mesh_spec, scan=self.scannable)
             self.scannable = self._sharded.scannable
@@ -164,6 +179,42 @@ class CutiePipeline:
 
     def shapes(self, in_shape) -> list[tuple]:
         return program_shapes(self.program, in_shape)
+
+    def execution_plan(self) -> dict:
+        """How this pipeline will execute a (tracer-less) run.
+
+        ``mode`` is one of ``"sharded-per-layer"`` (mesh shard_map over
+        each layer), ``"program"`` (the backend's whole-program build,
+        e.g. fused trunk megakernels), ``"scan"`` (lax.scan over the
+        stacked uniform layer FIFO) or ``"per-layer"`` (unrolled in one
+        jit).  ``reason`` says why that mode won, which is how the
+        fused-backend-on-a-mesh drop (per-layer wins over megakernels)
+        is surfaced instead of silently happening.
+        """
+        has_program = hasattr(self.backend, "build_program")
+        if self._sharded is not None:
+            reason = ("mesh execution is per-layer shard_map; the "
+                      f"backend's program-level build is dropped"
+                      if has_program else
+                      "mesh= requested; per-layer shard_map")
+            mode = "sharded-per-layer"
+        elif has_program:
+            mode, reason = "program", (
+                f"backend {self.backend.name!r} provides build_program "
+                "(whole-program megakernels)")
+        elif self.scannable:
+            mode, reason = "scan", ("uniform layer FIFO; lax.scan over "
+                                    "stacked layers")
+        else:
+            mode, reason = "per-layer", ("non-uniform program; unrolled "
+                                        "in one jit")
+        return {
+            "mode": mode,
+            "backend": self.backend_name,
+            "mesh": str(self.mesh_spec) if self.mesh_spec else None,
+            "scannable": self.scannable,
+            "reason": reason,
+        }
 
     def __repr__(self) -> str:
         mesh = f", mesh={self.mesh_spec}" if self.mesh_spec else ""
@@ -261,16 +312,6 @@ class CutiePipeline:
         return res
 
     # -- serving ------------------------------------------------------------
-
-    def serve(self, scfg=None, *, head=None, tracer: Tracer | None = None):
-        """Slot-based batch-inference server over this pipeline.
-
-        Legacy surface; prefer :meth:`engine` for scheduling policies,
-        cancellation, deadlines and latency accounting.
-        """
-        from repro.serving.cutie_server import CutieServer
-
-        return CutieServer(self, scfg, head=head, tracer=tracer)
 
     def engine(self, scheduler="fcfs", *, model: str = "default",
                buckets=None, head=None, tracer: Tracer | None = None):

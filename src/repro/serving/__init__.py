@@ -4,24 +4,31 @@ The whole serving plane sits behind :class:`CutieEngine`'s
 submit → schedule → execute → stream lifecycle: pluggable schedulers
 (FCFS / priority / deadline), a multi-model hot-swappable registry,
 batch-bucketing executors with bounded jit variants, and first-class
-latency / queue-depth / switching-energy stats.  `CutieServer` and the
-LLM `Server` remain as thin deprecated adapters over the engine.
+latency / queue-depth / switching-energy stats.  LLM decode memory is
+**paged** (:mod:`repro.serving.blocks`): block-granular allocation,
+content-hash prefix reuse, LRU eviction and copy-on-write forks behind
+`LLMExecutor`'s split `prefill()` / `decode()` paths.
+
+The PR-1/PR-3 `Server` / `CutieServer` adapter shims are retired:
+register an executor on a `CutieEngine` (or use
+`CutiePipeline.engine()`) instead.
 """
 
-from repro.serving.cutie_server import (CutieServer,  # noqa: F401
-                                        CutieServerConfig, ImageRequest)
+from repro.serving.blocks import (BlockPool, KVPagedStore,  # noqa: F401
+                                  OutOfBlocks, PagedSequenceManager,
+                                  PrefixCache, StatePagedStore)
 from repro.serving.engine import CutieEngine, percentiles  # noqa: F401
 from repro.serving.executors import (DEFAULT_BUCKETS,  # noqa: F401
                                      ExecutionReport, Executor,
                                      ProgramExecutor)
+from repro.serving.llm import (ExistingPrefix, LLMExecutor,  # noqa: F401
+                               PrefillResult, ServerConfig)
 from repro.serving.registry import ModelRegistry  # noqa: F401
 from repro.serving.request import (Request, RequestCancelled,  # noqa: F401
                                    RequestHandle, RequestStatus)
 from repro.serving.scheduler import (SCHEDULERS, DeadlineScheduler,  # noqa: F401
                                      FCFSScheduler, PriorityScheduler,
                                      Scheduler, get_scheduler)
-from repro.serving.server import (LLMExecutor, Server,  # noqa: F401
-                                  ServerConfig)
 
 __all__ = [
     "CutieEngine", "percentiles",
@@ -30,6 +37,7 @@ __all__ = [
     "Scheduler", "FCFSScheduler", "PriorityScheduler", "DeadlineScheduler",
     "SCHEDULERS", "get_scheduler",
     "Executor", "ProgramExecutor", "ExecutionReport", "DEFAULT_BUCKETS",
-    "LLMExecutor", "Server", "ServerConfig",
-    "CutieServer", "CutieServerConfig", "ImageRequest",
+    "LLMExecutor", "ServerConfig", "ExistingPrefix", "PrefillResult",
+    "BlockPool", "OutOfBlocks", "PrefixCache", "PagedSequenceManager",
+    "KVPagedStore", "StatePagedStore",
 ]

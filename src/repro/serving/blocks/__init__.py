@@ -1,0 +1,43 @@
+"""Paged ternary state: block-granular KV/state memory with prefix reuse.
+
+The subsystem splits into four pieces:
+
+* :mod:`~repro.serving.blocks.pool` — `BlockPool`, the refcounted
+  physical-block allocator with LRU eviction of parked prefix blocks
+  and copy-on-write discipline (`writable`).
+* :mod:`~repro.serving.blocks.prefix` — `PrefixCache`, the content-hash
+  (chain-hashed token block) -> physical block map plus hit accounting.
+* :mod:`~repro.serving.blocks.store` — the physical pages:
+  `KVPagedStore` (attention KV rows, optionally ternarized + packed
+  5 trits/byte) and `StatePagedStore` (SSM state snapshots, trit
+  leaves packed losslessly 5/byte via `repro.core.codec`).
+* :mod:`~repro.serving.blocks.manager` — `PagedSequenceManager`, the
+  per-sequence block tables tying the three together.
+
+`repro.serving.llm.LLMExecutor` composes these into the paged serving
+path; see tests/test_paged_state.py for lifecycle walkthroughs.
+"""
+
+from repro.serving.blocks.manager import PagedSequenceManager, SeqBlocks
+from repro.serving.blocks.pool import NULL_BLOCK, BlockPool, OutOfBlocks
+from repro.serving.blocks.prefix import (PrefixCache, chain_hash,
+                                         chain_hashes)
+from repro.serving.blocks.store import (KVPagedStore, StatePagedStore,
+                                        pack_last_axis, ternarize_rows,
+                                        unpack_last_axis)
+
+__all__ = [
+    "NULL_BLOCK",
+    "BlockPool",
+    "OutOfBlocks",
+    "PrefixCache",
+    "chain_hash",
+    "chain_hashes",
+    "KVPagedStore",
+    "StatePagedStore",
+    "pack_last_axis",
+    "unpack_last_axis",
+    "ternarize_rows",
+    "PagedSequenceManager",
+    "SeqBlocks",
+]

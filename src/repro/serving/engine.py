@@ -289,6 +289,12 @@ class CutieEngine:
                    "devices": ex.mesh_spec.n_devices}
             for name, ex in self.registry.items()
             if isinstance(ex, ProgramExecutor) and ex.mesh_spec is not None}
+        # executor-specific accounting (paged-state block/prefix counters
+        # from LLM executors ride in here; see Executor.extra_stats)
+        paged_state = {name: s for name, s in
+                       ((n, ex.extra_stats())
+                        for n, ex in self.registry.items())
+                       if s is not None}
         return {
             "scheduler": self.scheduler.name,
             "n_requests": self._uid,
@@ -310,6 +316,7 @@ class CutieEngine:
             "by_tag": by_tag,
             "energy_uj": self._energy_uj if self._energy_uj else None,
             "jit_variants": jit_variants,
+            "paged_state": paged_state or None,
         }
 
     def traced(self, model: Optional[str] = None) -> list:

@@ -8,7 +8,7 @@ families:
 
 * one-shot (`ProgramExecutor`): a request completes in a single call —
   the CUTIE CNN case, one whole-program jitted execution per batch;
-* resident (e.g. the LLM decode loop in `repro.serving.server`): a
+* resident (e.g. the LLM decode loop in `repro.serving.llm`): a
   request occupies a slot across many calls and completes later, so
   ``execute`` may return fewer completions than it was handed and
   ``has_resident()`` keeps the engine stepping while work is in flight.
@@ -58,6 +58,11 @@ class Executor:
     def has_resident(self) -> bool:
         """True while previously admitted requests are still in flight."""
         return False
+
+    def extra_stats(self) -> Optional[dict]:
+        """Executor-specific accounting merged into ``engine.stats()``
+        (e.g. the paged-state block/prefix counters); None to omit."""
+        return None
 
     def execute(self, requests) -> ExecutionReport:
         raise NotImplementedError

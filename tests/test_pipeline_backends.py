@@ -154,39 +154,38 @@ def test_measure_through_tracer_path():
 # ---------------------------------------------------------------------------
 
 
-def test_cutie_server_continuous_batching():
+def test_engine_continuous_batching():
     prog = _uniform_program(seed=13)
     pipe = CutiePipeline(prog)
-    from repro.serving import CutieServerConfig
-    server = pipe.serve(CutieServerConfig(n_slots=3))
+    eng = pipe.engine(buckets=(3,))
 
     rng = np.random.default_rng(0)
     imgs = [rng.integers(-1, 2, size=(8, 8, 8)).astype(np.int8)
             for _ in range(7)]
-    uids = [server.submit(im) for im in imgs]
-    results = server.run()
+    uids = [eng.submit(im).uid for im in imgs]
+    results = eng.run()
 
     assert sorted(results) == sorted(uids)
-    assert server.n_batches == 3          # ceil(7 / 3) slot batches
+    assert eng.n_batches == 3             # ceil(7 / 3) bucketed batches
     for uid, im in zip(uids, imgs):
         want = np.asarray(pipe.run(jnp.asarray(im[None])))[0]
         assert np.array_equal(results[uid], want)
 
     with pytest.raises(ValueError, match="does not match serving shape"):
-        server.submit(np.zeros((4, 4, 8), np.int8))
+        eng.submit(np.zeros((4, 4, 8), np.int8))
 
 
-def test_cutie_server_tracer_covers_only_live_requests():
-    """A lone request in a 4-slot server must not have its traced stats
+def test_engine_tracer_covers_only_live_requests():
+    """A lone request in a padded batch must not have its traced stats
     diluted by empty padding slots."""
     prog = _uniform_program(seed=23)
     pipe = CutiePipeline(prog)
-    server = pipe.serve(tracer=StatsTracer())
+    eng = pipe.engine(tracer=StatsTracer())
     img = np.asarray(_trits(jax.random.PRNGKey(3), (8, 8, 8)))
-    server.submit(img)
-    server.run()
+    eng.submit(img)
+    eng.run()
     _, want = pipe.run(jnp.asarray(img[None]), tracer=StatsTracer())
-    assert server.traced == [want]
+    assert eng.traced() == [want]
 
 
 def test_layer_ops_agrees_with_inferred_shape():
@@ -200,14 +199,14 @@ def test_layer_ops_agrees_with_inferred_shape():
     assert engine.layer_ops(instr, (1, 9, 9, 8)) == 2 * 5 * 5 * 3 * 3 * 8 * 8
 
 
-def test_cutie_server_head_and_late_submit():
+def test_engine_head_and_late_submit():
     prog = _uniform_program(seed=17)
     pipe = CutiePipeline(prog)
-    server = pipe.serve(head=lambda feats: int(feats.sum()))
-    first = server.submit(np.zeros((8, 8, 8), np.int8))
-    assert server.step()
-    late = server.submit(np.ones((8, 8, 8), np.int8))
-    results = server.run()
+    eng = pipe.engine(head=lambda feats: int(feats.sum()))
+    first = eng.submit(np.zeros((8, 8, 8), np.int8)).uid
+    assert eng.step()
+    late = eng.submit(np.ones((8, 8, 8), np.int8)).uid
+    results = eng.run()
     assert set(results) == {first, late}
     assert all(isinstance(v, int) for v in results.values())
 

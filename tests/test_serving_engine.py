@@ -2,9 +2,9 @@
 
 Queue ordering under each scheduler policy, cancellation before/after
 admission, multi-model routing + hot-swap, trit-domain submit
-validation, bounded jit variants under random load, streaming, stats,
-and the legacy adapters (CutieServer, LLM Server) staying thin over the
-engine.
+validation, bounded jit variants under random load, streaming, and
+stats.  (The paged LLM executor has its own suite in
+tests/test_paged_state.py.)
 """
 
 import jax
@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import engine as core_engine
 from repro.pipeline import CutiePipeline, SwitchingTracer
-from repro.serving import (CutieEngine, CutieServer, DeadlineScheduler,
+from repro.serving import (CutieEngine, DeadlineScheduler,
                            ModelRegistry, ProgramExecutor, RequestCancelled,
                            RequestStatus, get_scheduler)
 
@@ -334,26 +334,19 @@ def test_stats_latency_queue_depth_and_energy():
 
 
 # ---------------------------------------------------------------------------
-# legacy adapters
+# pipeline serving front door
 # ---------------------------------------------------------------------------
 
 
-def test_cutie_server_configs_are_not_shared():
-    pipe = _pipe()
-    s1, s2 = CutieServer(pipe), CutieServer(pipe)
-    assert s1.scfg is not s2.scfg                # no shared default instance
-    assert s1.scfg == s2.scfg
-
-
-def test_cutie_server_is_thin_over_engine():
+def test_pipeline_engine_serves_and_validates():
     pipe = _pipe(seed=25)
-    server = CutieServer(pipe)
-    assert server.engine.scheduler.name == "fcfs"
+    eng = pipe.engine()
+    assert eng.scheduler.name == "fcfs"
     rng = np.random.default_rng(0)
     img = _img(rng)
-    uid = server.submit(img)
-    out = server.run()
+    uid = eng.submit(img).uid
+    out = eng.run()
     assert np.array_equal(
         out[uid], np.asarray(pipe.run(jnp.asarray(img[None])))[0])
     with pytest.raises(ValueError, match=r"\{-1, 0, \+1\}"):
-        server.submit(np.full((8, 8, 8), 3, np.int32))
+        eng.submit(np.full((8, 8, 8), 3, np.int32))

@@ -18,7 +18,7 @@ from repro.models import transformer as TF
 from repro.models.config import ShapeSpec, reduce_for_smoke
 from repro.optim import adam, compress
 from repro.roofline import hlo, terms
-from repro.serving import Server, ServerConfig
+from repro.serving import CutieEngine, LLMExecutor, ServerConfig
 from repro.train import loop
 
 
@@ -226,22 +226,23 @@ def test_compress_tree_wire_savings():
 def test_server_continuous_batching_completes_and_deterministic():
     cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=1)
     params = TF.init_params(cfg, jax.random.PRNGKey(0))
-    scfg = ServerConfig(n_slots=2, max_new_tokens=5)
+    scfg = ServerConfig(n_slots=2, max_new_tokens=5, max_len=64,
+                        block_size=8)
     prompts = [np.arange(4) + i for i in range(5)]
 
-    outs = []
-    for _ in range(2):
-        server = Server(params, cfg, scfg)
-        for pr in prompts:
-            server.submit(pr)
-        outs.append(server.run())
+    def serve(prs):
+        eng = CutieEngine("fcfs")
+        eng.register("llm", LLMExecutor(params, cfg, scfg))
+        for pr in prs:
+            eng.submit(pr, model="llm")
+        return eng.run()
+
+    outs = [serve(prompts), serve(prompts)]
     assert len(outs[0]) == 5
     assert all(len(v) == 5 for v in outs[0].values())
     assert outs[0] == outs[1]                     # deterministic greedy
     # same prompt -> same continuation regardless of slot/queue position
-    server = Server(params, cfg, scfg)
-    server.submit(prompts[0])
-    solo = server.run()
+    solo = serve(prompts[:1])
     assert solo[1] == outs[0][1]
 
 
