@@ -30,7 +30,7 @@ import numpy as np
 from repro import compiler
 from repro.core import engine
 from repro.pipeline import (CutiePipeline, FusedBackend, StatsTracer,
-                            available_backends)
+                            SwitchingTracer, available_backends)
 
 #: Metrics `run.py --compare` diffs against the committed artifact
 #: (direction: "lower" = smaller is faster, "higher" = bigger is better).
@@ -50,11 +50,13 @@ INFO_METRICS = {
     "ms_per_run.packed": "lower",
     "ms_per_run.fused": "lower",
     "ms_rel_ref.fused": "lower",
+    "fused_stats_overhead": "lower",
 }
 
 #: Boolean entries of ``res["checks"]`` that `--compare` enforces
 #: (intra-run ratios: robust to host noise, unlike absolute ms).
-SPEED_CHECKS = ("fused_speedup_ge_1p5",)
+SPEED_CHECKS = ("fused_speedup_ge_1p5", "fused_stats_overhead_le_1p15",
+                "fused_traced_stays_fused")
 
 
 def _bn(c, key):
@@ -174,6 +176,30 @@ def run(c: int = 32, n_layers: int = 6, batch: int = 4, hw: int = 32,
         times[bname] = _timed(lambda p=pipe: p.run(x))
     speedup = times["pallas"] / times["fused"]
 
+    # -- in-kernel stats overhead on the fused fast path ------------------
+    # A SwitchingTracer run must stay a single fused program (per-layer
+    # counter outputs ride next to the activations instead of breaking
+    # the megakernel apart) and cost <= 15% over the untraced run — the
+    # price of the fast path knowing its own switching energy.  The two
+    # sides are timed interleaved (best-of-reps each) so host-load drift
+    # between separate timing blocks cannot flap the gated ratio.
+    fused_pipe = CutiePipeline(prog, backend="fused")
+    sw = SwitchingTracer()
+    jax.block_until_ready(fused_pipe.run(x))            # warm both jits
+    jax.block_until_ready(fused_pipe.run(x, tracer=sw)[0])
+    best_plain = best_stats = float("inf")
+    for _ in range(20):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused_pipe.run(x))
+        best_plain = min(best_plain, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out, _rows = fused_pipe.run(x, tracer=sw)
+        jax.block_until_ready(out)
+        best_stats = min(best_stats, time.perf_counter() - t0)
+    stats_overhead = best_stats / best_plain
+    traced_plan = fused_pipe.execution_plan(tracer=sw)
+    traced_stays_fused = traced_plan["mode"] == "program"
+
     fused = FusedBackend()
     segments = fused.plan(prog, x.shape)
     n_fused = sum(1 for s in segments if s.fused)
@@ -187,12 +213,15 @@ def run(c: int = 32, n_layers: int = 6, batch: int = 4, hw: int = 32,
         "ms_per_run": {n: t * 1e3 for n, t in times.items()},
         "ms_rel_ref": {n: t / times["ref"] for n, t in times.items()},
         "fused_speedup_vs_pallas": speedup,
+        "fused_stats_overhead": stats_overhead,
         "cifar_segments": [[s.start, s.stop, s.fused] for s in segments],
         "cifar_fused_trunks": n_fused,
         "checks": {
             "all_backends_bit_identical": all(bit_identical.values()),
             "all_tracer_stats_identical": all(stats_identical.values()),
             "fused_speedup_ge_1p5": bool(speedup >= 1.5),
+            "fused_stats_overhead_le_1p15": bool(stats_overhead <= 1.15),
+            "fused_traced_stays_fused": bool(traced_stays_fused),
         },
     }
 
@@ -214,5 +243,8 @@ def report(res: dict) -> str:
         f"{res['fused_speedup_vs_pallas']:.2f}x "
         f"({res['cifar_fused_trunks']} fused trunk(s), segments "
         f"{res['cifar_segments']})")
+    lines.append(
+        f"in-kernel stats overhead (fused + SwitchingTracer vs fused): "
+        f"{res['fused_stats_overhead']:.2f}x")
     lines.append(f"checks: {res['checks']}")
     return "\n".join(lines)

@@ -13,10 +13,17 @@ Headlines:
   * per-request outputs are bit-identical across the ref/pallas/packed
     execution backends when served through the engine.
 
+``--trace out.trace.json`` additionally captures one mixed CNN + LLM
+serving run through the engine's request-lifecycle recorder, exports it
+as Chrome/Perfetto trace-event JSON, and schema-validates it
+(`repro.obs.validate_trace`: integer monotonic timestamps, balanced
+B/E spans per track, every request track carries at least one complete
+span) — the smoke gate fails if the trace does not validate.
+
 CLI (used by the CI smoke job):
 
     PYTHONPATH=src python benchmarks/serving_load.py --smoke --backend ref \
-        --step-timeout 60
+        --step-timeout 60 --trace serving.trace.json
 """
 
 from __future__ import annotations
@@ -169,6 +176,49 @@ def _parity(n_images: int, seed: int) -> dict:
             for b, o in outs.items()}
 
 
+def capture_trace(path: str, backend: str = "ref", seed: int = 0) -> dict:
+    """One mixed CNN + LLM serving run with the lifecycle recorder on;
+    exports ``path`` and returns the validator's summary.
+
+    The LLM prompts share a 20-token prefix so the trace demonstrably
+    contains prefix-cache hit events, and the CNN model runs under a
+    SwitchingTracer so traced-batch energy accounting rides along too.
+    """
+    import repro.configs as configs
+    from repro import obs
+    from repro.models import transformer as TF
+    from repro.models.config import reduce_for_smoke
+    from repro.pipeline import SwitchingTracer
+    from repro.serving import LLMExecutor, ServerConfig
+
+    eng = CutieEngine("fcfs")
+    pipe, shape = _pipeline(backend, seed=seed)
+    eng.register("cnn", pipe, buckets=(1, 2), tracer=SwitchingTracer())
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=1)
+    params = TF.init_params(cfg, jax.random.PRNGKey(seed))
+    eng.register("llm", LLMExecutor(params, cfg, ServerConfig(
+        paged=True, n_slots=2, max_new_tokens=4, max_len=64,
+        block_size=8)))
+
+    rng = np.random.default_rng(seed)
+    shared = list(np.arange(20) % 50)                 # guaranteed hits
+    for i in range(4):
+        eng.submit(rng.integers(-1, 2, size=shape).astype(np.int8),
+                   model="cnn", tag="interactive" if i % 2 else "batch")
+        eng.submit(np.array(shared + [100 + i, i]), model="llm")
+    eng.run()
+
+    trace = eng.trace_export(path)
+    info = obs.validate_trace(trace)
+    names = {e["name"] for e in trace["traceEvents"]}
+    required = {"submit", "queued", "schedule", "batch", "execute",
+                "prefill", "decode"}
+    info["has_lifecycle_events"] = required <= names
+    info["has_prefix_events"] = bool({"prefix_hit", "prefix_miss"} & names)
+    info["path"] = path
+    return info
+
+
 def run(backend: str = "ref", n_requests: int = 128, seed: int = 0,
         smoke: bool = False, step_timeout: float | None = None) -> dict:
     if smoke:
@@ -228,6 +278,8 @@ def report(res: dict) -> str:
             f"{'-' if met is None else f'{met:.0%}'} | "
             f"{r['queue_depth_max']} |")
     lines.append(f"parity vs ref: {res['parity_vs_ref']}")
+    if "trace" in res:
+        lines.append(f"trace: {res['trace']}")
     lines.append(f"checks: {res['checks']}")
     return "\n".join(lines)
 
@@ -242,16 +294,33 @@ def main(argv=None) -> int:
                          "or deadlock (timing checks are reported only)")
     ap.add_argument("--step-timeout", type=float, default=None,
                     help="max seconds for one engine step before failing")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="capture + schema-validate a request-lifecycle "
+                         "trace (Perfetto JSON) at PATH")
     args = ap.parse_args(argv)
 
     res = run(backend=args.backend, n_requests=args.requests,
               seed=args.seed, smoke=args.smoke,
               step_timeout=args.step_timeout)
+    if args.trace is not None:
+        try:
+            info = capture_trace(args.trace, backend=args.backend,
+                                 seed=args.seed)
+            trace_ok = (info["has_lifecycle_events"]
+                        and info["has_prefix_events"]
+                        and info["n_request_tracks"] > 0)
+        except ValueError as err:          # validator rejected the trace
+            info, trace_ok = {"error": str(err)}, False
+        res["trace"] = info
+        res["checks"]["trace_valid"] = trace_ok
     print(report(res))
     if args.smoke:
-        # Gate only on determinism + liveness; latency comparisons are
-        # hardware-dependent and reported, not asserted, under --smoke.
-        return 0 if res["checks"]["backends_bit_identical"] else 1
+        # Gate only on determinism + liveness (and, with --trace, the
+        # trace schema); latency comparisons are hardware-dependent and
+        # reported, not asserted, under --smoke.
+        ok = res["checks"]["backends_bit_identical"] and \
+            res["checks"].get("trace_valid", True)
+        return 0 if ok else 1
     ok = all(res["checks"].values())
     return 0 if ok else 1
 

@@ -50,13 +50,20 @@ class Trunk:
     ``fused`` segments run inside a single fused-trunk megakernel;
     non-fused segments fall back to the per-layer kernels.
     ``vmem_bytes`` is the fused segment's priced VMEM residency (0 for
-    per-layer segments).
+    per-layer segments).  ``reason`` says *why* the segment has its
+    shape — why a per-layer segment could not fuse
+    (``"unpadded"`` / ``"width-change"`` / ``"vmem-budget"`` /
+    ``"short-run"``), or why a fused trunk stopped growing
+    (``"vmem-budget"``; empty when it simply reached a natural
+    boundary) — so degradations surface in ``execution_plan()`` instead
+    of silently happening.
     """
 
     start: int
     stop: int
     fused: bool
     vmem_bytes: int = 0
+    reason: str = ""
 
     def __len__(self) -> int:
         return self.stop - self.start
@@ -109,23 +116,32 @@ def trunk_vmem_bytes(layers, in_shape) -> int:
     return weights + thresholds + scratch + transient + io
 
 
-def _trunk_stop(layers, i: int, in_shape, budget: int) -> int:
-    """Longest fusible trunk starting at layer i (may be length 1)."""
+def _trunk_stop(layers, i: int, in_shape, budget: int) -> tuple[int, str]:
+    """Longest fusible trunk starting at layer i (may be length 1).
+
+    Returns ``(stop, reason)`` — the exclusive stop index and why the
+    trunk stopped growing there: ``"unpadded"`` (the head or the next
+    layer lacks full padding), ``"width-change"`` (kernel size or
+    channel width breaks uniformity), ``"vmem-budget"`` (the next layer
+    would overflow the budget) or ``"end"`` (ran off the program).
+    """
     head = layers[i]
     if not head.padding:
-        return i + 1
+        return i + 1, "unpadded"
     k0 = head.kernel_size
     c0 = head.weights.shape[-1]
     j = i + 1
     while j < len(layers):
         instr = layers[j]
-        if not (instr.padding and instr.kernel_size == k0
-                and instr.weights.shape[2:] == (c0, c0)):
-            break
+        if not instr.padding:
+            return j, "unpadded"
+        if (instr.kernel_size != k0
+                or instr.weights.shape[2:] != (c0, c0)):
+            return j, "width-change"
         if trunk_vmem_bytes(layers[i:j + 1], in_shape) > budget:
-            break
+            return j, "vmem-budget"
         j += 1
-    return j
+    return j, "end"
 
 
 def plan_segments(program: engine.CutieProgram, in_shape,
@@ -146,23 +162,33 @@ def plan_segments(program: engine.CutieProgram, in_shape,
 
     segments: list[Trunk] = []
     pend = None                    # start of the open per-layer group
+    pend_why: list[str] = []       # per-layer non-fusibility reasons
     i = 0
+
+    def close_pend(upto: int):
+        nonlocal pend
+        why = "/".join(dict.fromkeys(pend_why))   # unique, in order
+        segments.append(Trunk(pend, upto, fused=False, reason=why))
+        pend = None
+        pend_why.clear()
+
     while i < len(layers):
         h, w = shapes[i]
         shape_i = (n, h, w, layers[i].weights.shape[2])
-        j = _trunk_stop(layers, i, shape_i, budget)
+        j, why = _trunk_stop(layers, i, shape_i, budget)
         if j - i >= 2:
             if pend is not None:
-                segments.append(Trunk(pend, i, fused=False))
-                pend = None
+                close_pend(i)
             segments.append(Trunk(
                 i, j, fused=True,
-                vmem_bytes=trunk_vmem_bytes(layers[i:j], shape_i)))
+                vmem_bytes=trunk_vmem_bytes(layers[i:j], shape_i),
+                reason=why if why == "vmem-budget" else ""))
             i = j
         else:
             # lone layer: the per-layer kernel is exactly equivalent
             pend = i if pend is None else pend
+            pend_why.append("short-run" if why == "end" else why)
             i += 1
     if pend is not None:
-        segments.append(Trunk(pend, len(layers), fused=False))
+        close_pend(len(layers))
     return segments

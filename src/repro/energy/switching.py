@@ -75,6 +75,21 @@ def window_toggle(x: Array, k: int, *, padding: bool = True
     }
 
 
+def window_toggle_count(x: Array, k: int, *, padding: bool = True) -> Array:
+    """Scalar int32 toggle *count* of the unrolled schedule (exact).
+
+    The integer numerator behind :func:`window_toggle`'s probabilities:
+    the number of (tap, channel) positions differing between consecutive
+    raster windows, summed over the raster.  Being an integer it is
+    bit-comparable (no float tolerance) against the in-kernel counters
+    the Pallas paths emit (`repro.kernels.epilogue.window_toggle_count`)
+    — the parity the tracer/backend tests pin.  x: (H, W, Cin) trits.
+    """
+    win = _windows_raster(x, k, padding)              # float32, trit-exact
+    return jnp.sum((win[1:] != win[:-1]).astype(jnp.int32),
+                   dtype=jnp.int32)
+
+
 def unrolled_toggle(x: Array, w: Array, *, padding: bool = True
                     ) -> SwitchingStats:
     """CUTIE schedule: one window per cycle, weights stationary.

@@ -75,6 +75,64 @@ def const_fixup(y, const, is_const):
     return jnp.where(is_const != 0, const.astype(jnp.int8), y)
 
 
+def zero_count(x) -> jnp.ndarray:
+    """Scalar int32 count of zero trits in x (kernel-safe, exact)."""
+    return jnp.sum((x == 0).astype(jnp.int32), dtype=jnp.int32)
+
+
+def _coverage(idx, n_anchor: int, k: int):
+    """How many of the ``n_anchor`` stride-1 length-``k`` boxes cover
+    each index in ``idx`` — the trapezoid 1,2,..,k,..,2,1 clipped by the
+    anchor count.  ``idx`` is a traced iota (a numpy constant would be
+    captured by the Pallas kernel, which rejects non-ref consts)."""
+    return jnp.minimum(jnp.minimum(idx, n_anchor - 1),
+                       jnp.minimum(k - 1, n_anchor + k - 2 - idx)) + 1
+
+
+def window_toggle_count(xp, k: int, oh: int, ow: int, cin: int
+                        ) -> jnp.ndarray:
+    """Int32 toggle count over consecutive raster windows, in-kernel.
+
+    ``xp`` is one image's (PH, PW, C) padded input already resident in
+    VMEM; the (oh, ow) stride-1 window grid walks it in row-major raster
+    order — the unrolled OCU schedule.  The count is the number of
+    (tap, channel) positions that differ between consecutive windows,
+    summed over the whole raster: the integer numerator of
+    `repro.energy.switching.window_toggle`'s ``mult_toggle`` (and, per
+    window, of ``window_hamming``).  Only the first ``cin`` channels are
+    counted, so zero-padded spare trunk channels never inflate it.  The
+    toggle count is invariant to the (tap, channel) feature ordering —
+    only the raster order of windows matters — so this matches the
+    traced-side patch extraction exactly, integer for integer.
+
+    Computed without materializing the (OH*OW, K*K*C) patch matrix: a
+    horizontal window step (r,c)->(r,c+1) toggles exactly the k*k box of
+    the pixel-difference map D[i,j] = #{ch: x[i,j+1,ch] != x[i,j,ch]}
+    anchored at (r,c), so the sum over all oh*(ow-1) such steps is one
+    weighted reduction of D against the static box-coverage counts; the
+    oh-1 row-wrap steps (r,ow-1)->(r+1,0) — not shifts, the raster
+    jumps — are summed directly.  O(PH*PW*C) instead of O(OH*OW*K*K*C).
+    """
+    ph, pw = oh + k - 1, ow + k - 1
+    x = jax.lax.slice(xp, (0, 0, 0), (ph, pw, cin))
+    total = jnp.int32(0)
+    if ow > 1:
+        d = jnp.sum((jax.lax.slice(x, (0, 1, 0), (ph, pw, cin))
+                     != jax.lax.slice(x, (0, 0, 0), (ph, pw - 1, cin))
+                     ).astype(jnp.int32), axis=-1)        # (PH, PW-1)
+        ri = jax.lax.broadcasted_iota(jnp.int32, (ph, pw - 1), 0)
+        ci = jax.lax.broadcasted_iota(jnp.int32, (ph, pw - 1), 1)
+        cover = _coverage(ri, oh, k) * _coverage(ci, ow - 1, k)
+        total = total + jnp.sum(d * cover, dtype=jnp.int32)
+    if oh > 1:
+        for kh in range(k):       # k row-tap slices, each (OH-1, K, C)
+            nxt = jax.lax.slice(x, (kh + 1, 0, 0), (kh + oh, k, cin))
+            prv = jax.lax.slice(x, (kh, ow - 1, 0), (kh + oh - 1, pw, cin))
+            total = total + jnp.sum((nxt != prv).astype(jnp.int32),
+                                    dtype=jnp.int32)
+    return total
+
+
 def layer_epilogue(z, t_lo, t_hi, flip, const=None, is_const=None,
                    pool=None):
     """Full OCU writeback: optional merged pool, compare, const channels.

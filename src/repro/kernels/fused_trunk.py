@@ -74,8 +74,8 @@ def _pack_trits(t):
 
 
 def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
-                  isc_ref, o_ref, a_ref, b_ref, *, k: int, metas, shapes,
-                  unpack_shape, pack_out: bool):
+                  isc_ref, o_ref, *rest, k: int, metas, shapes,
+                  unpack_shape, pack_out: bool, stats_cin):
     """The megakernel body: unrolled layers over ping-pong scratch.
 
     The scratch buffers carry ``cu`` channels (the trunk's zero-padded
@@ -89,11 +89,22 @@ def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
     the only tensor that crosses HBM between two fused trunks is the
     packed byte stream (paper §III-A's 1.6 bits/trit on the feature-map
     path).
+
+    With ``stats_cin`` (the head layer's *logical* Cin) a second output
+    ref rides along and receives per-layer int32 switching counters —
+    (in-zero, out-zero, window-toggle) — computed on the activations
+    while they are still in VMEM, sliced to each layer's logical channel
+    count so the zero-padded spare channels never inflate them.
     """
+    if stats_cin is None:
+        s_ref, (a_ref, b_ref) = None, rest
+    else:
+        s_ref, a_ref, b_ref = rest
     p = k // 2
     n, cu = a_ref.shape[0], a_ref.shape[-1]
     c = w_ref.shape[-1]
     h, w = shapes[0]
+    stat_rows = []
     a_ref[...] = jnp.zeros(a_ref.shape, jnp.int8)   # zero halo once
     if unpack_shape is None:
         a_ref[:, p:p + h, p:p + w, :] = x_ref[...]
@@ -109,6 +120,14 @@ def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
         sh, sw = stride
         oh, ow = conv_out_dims(k, stride, True, h, w)
         xp = src[:, :h + 2 * p, :w + 2 * p, :]      # padded view, in VMEM
+        if s_ref is not None:
+            # Logical channel width of this layer's input: the head's
+            # true Cin (spare trunk channels are zero-padding, not
+            # activations), C afterwards.
+            cin_l = stats_cin if l == 0 else c
+            in_zero = epi.zero_count(src[:, p:p + h, p:p + w, :cin_l])
+            toggle = epi.window_toggle_count(
+                xp[0, :, :, :cin_l], k, h, w, cin_l)
         # The completely unrolled OCU dot (paper §III-C: "each output
         # channel value is computed in a single cycle"): gather every
         # output pixel's K*K*C window and contract it against all output
@@ -130,6 +149,9 @@ def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
         out = epi.layer_epilogue(
             acc.reshape(n, oh, ow, c), tlo_ref[l], thi_ref[l], flip_ref[l],
             const_ref[l], isc_ref[l], pool)         # (N, OH', OW', C) trits
+        if s_ref is not None:
+            stat_rows.append(jnp.stack(
+                [in_zero, epi.zero_count(out), toggle]))
         if l == len(metas) - 1:
             if pack_out:
                 flat = out.reshape(-1)
@@ -143,10 +165,13 @@ def _trunk_kernel(x_ref, w_ref, tlo_ref, thi_ref, flip_ref, const_ref,
             dst[...] = jnp.zeros(dst.shape, jnp.int8)
             dst[:, p:p + nh, p:p + nw, :c] = out
             src, dst = dst, src
+    if s_ref is not None:
+        s_ref[...] = jnp.stack(stat_rows)           # (L, 3) int32
 
 
 def fused_trunk_pallas(x, w_stack, t_lo, t_hi, flip, const, is_const, *,
                        metas, packed_in=None, pack_out: bool = False,
+                       emit_stats: bool = False, stats_cin=None,
                        interpret: bool = False):
     """Run a trunk of L uniform padded layers in one pallas_call.
 
@@ -165,6 +190,16 @@ def fused_trunk_pallas(x, w_stack, t_lo, t_hi, flip, const, is_const, *,
     in-VMEM inside the kernel; with ``pack_out=True`` the result is the
     packed (G,) byte stream of the final trit map.  Chaining trunks this
     way means only packed bytes ever cross HBM between them.
+
+    In-kernel switching counters: with ``emit_stats=True`` a second
+    (L, 3) int32 output rides along — per layer (input-zero count over
+    the whole batch's logical channels, output-zero count, window-toggle
+    count of batch element 0's stride-1 raster windows) — and the return
+    value becomes ``(out, stats)``.  ``stats_cin`` is the head layer's
+    logical Cin (defaults to the input's channel count / the packed_in
+    Cin); layers past the head use the trunk width C.  The counts are
+    exactly the integers the traced per-layer path computes, so tracer
+    rows derived from them are bit-identical to a per-layer traced run.
     """
     nl, k = w_stack.shape[0], w_stack.shape[1]
     cu, c = w_stack.shape[3], w_stack.shape[4]
@@ -199,10 +234,19 @@ def fused_trunk_pallas(x, w_stack, t_lo, t_hi, flip, const, is_const, *,
         out_spec = pl.BlockSpec((n, oh, ow, c), lambda i: (0, 0, 0, 0))
         out_shape = jax.ShapeDtypeStruct((n, oh, ow, c), jnp.int8)
 
+    if emit_stats:
+        if stats_cin is None:
+            stats_cin = packed_in[-1] if packed_in else x.shape[-1]
+        out_spec = [out_spec, pl.BlockSpec((nl, 3), lambda i: (0, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((nl, 3), jnp.int32)]
+    else:
+        stats_cin = None
+
     kernel = functools.partial(
         _trunk_kernel, k=k, metas=tuple(metas), shapes=shapes,
         unpack_shape=tuple(packed_in) if packed_in else None,
-        pack_out=pack_out)
+        pack_out=pack_out, stats_cin=stats_cin)
     scratch = pltpu.VMEM((n, h + 2 * p, w + 2 * p, cu), jnp.int8)
 
     return pl.pallas_call(

@@ -66,33 +66,80 @@ def _conv_taps(xv, w_at, k: int, stride, oh: int, ow: int) -> jax.Array:
 
 def _finish(acc, o_ref, ep_refs, *, oh: int, ow: int, pool,
             fuse_threshold: bool):
-    """Shared writeback: raw int32, or the fused epilogue to trits."""
+    """Shared writeback: raw int32, or the fused epilogue to trits.
+
+    Returns the written block so callers can derive in-VMEM statistics
+    from it without re-reading the output ref.
+    """
     if not fuse_threshold:
-        o_ref[0] = acc.reshape(oh, ow, -1)
-        return
+        out = acc.reshape(oh, ow, -1)
+        o_ref[0] = out
+        return out
     vecs = [r[0] for r in ep_refs]                  # (bco,) each
     t_lo, t_hi, flip = vecs[:3]
     const, is_const = vecs[3:] if len(vecs) == 5 else (None, None)
     z = acc.reshape(1, oh, ow, acc.shape[-1])
     out = epi.layer_epilogue(z, t_lo, t_hi, flip, const, is_const, pool)
     o_ref[...] = out
+    return out
+
+
+def _cell_stats(xv, out, s_ref, *, k: int, padding: bool, hw):
+    """Per-grid-cell int32 counters: (in-zero, out-zero, window-toggle).
+
+    The grid's two axes are "parallel" — cells cannot accumulate into a
+    shared slot — so each (image, cout-tile) cell writes its own (3,)
+    row and the host combines them (`combine_cell_stats`): in-zero and
+    toggle are whole-image quantities (identical across cout tiles),
+    out-zero covers the cell's channel tile.  ``xv`` is the cell's
+    (PH, PW, Cin) input as the kernel sees it (pre-padded when the layer
+    pads), ``hw`` the *unpadded* (H, W), so in-zero counts the logical
+    interior only and the stride-1 toggle raster matches the traced
+    `energy.switching.window_toggle_count` exactly.
+    """
+    h0, w0 = hw
+    if padding:
+        p = k // 2
+        interior = xv[p:p + h0, p:p + w0, :]
+        wh, ww = h0, w0
+    else:
+        interior = xv
+        wh, ww = h0 - k + 1, w0 - k + 1
+    s_ref[0, 0] = jnp.stack([
+        epi.zero_count(interior),
+        epi.zero_count(out),
+        epi.window_toggle_count(xv, k, wh, ww, xv.shape[-1]),
+    ])
 
 
 def _conv_kernel(x_ref, w_ref, *rest, k: int, stride, oh: int, ow: int,
-                 fuse_threshold: bool, pool):
-    o_ref = rest[-1]
-    ep_refs = rest[:-1]  # no scratch: accumulator lives in registers
+                 fuse_threshold: bool, pool, emit_stats: bool, padding,
+                 stats_hw):
+    if emit_stats:
+        o_ref, s_ref = rest[-2], rest[-1]
+        ep_refs = rest[:-2]
+    else:
+        o_ref, s_ref = rest[-1], None
+        ep_refs = rest[:-1]  # no scratch: accumulator lives in registers
     acc = _conv_taps(x_ref[0], lambda kh, kw: w_ref[kh, kw], k, stride,
                      oh, ow)
-    _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
-            fuse_threshold=fuse_threshold)
+    out = _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
+                  fuse_threshold=fuse_threshold)
+    if s_ref is not None:
+        _cell_stats(x_ref[0], out, s_ref, k=k, padding=padding,
+                    hw=stats_hw)
 
 
 def _packed_conv_kernel(x_ref, wp_ref, *rest, k: int, cin: int, stride,
-                        oh: int, ow: int, pool):
+                        oh: int, ow: int, pool, emit_stats: bool, padding,
+                        stats_hw):
     """Conv with the 5-trits/byte decode fused in front of the taps."""
-    o_ref = rest[-1]
-    ep_refs = rest[:-1]
+    if emit_stats:
+        o_ref, s_ref = rest[-2], rest[-1]
+        ep_refs = rest[:-2]
+    else:
+        o_ref, s_ref = rest[-1], None
+        ep_refs = rest[:-1]
     trits = C.unpack_digits(wp_ref[...])            # (bco, G, 5)
     w_rows = trits.reshape(trits.shape[0], -1)[:, :k * k * cin]
 
@@ -101,8 +148,23 @@ def _packed_conv_kernel(x_ref, wp_ref, *rest, k: int, cin: int, stride,
         return w_rows[:, off:off + cin].astype(jnp.int8).T   # (Cin, bco)
 
     acc = _conv_taps(x_ref[0], w_at, k, stride, oh, ow)
-    _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
-            fuse_threshold=bool(ep_refs))
+    out = _finish(acc, o_ref, ep_refs, oh=oh, ow=ow, pool=pool,
+                  fuse_threshold=bool(ep_refs))
+    if s_ref is not None:
+        _cell_stats(x_ref[0], out, s_ref, k=k, padding=padding,
+                    hw=stats_hw)
+
+
+def combine_cell_stats(cells) -> "jnp.ndarray":
+    """(N, Cout-tiles, 3) per-cell counters -> the layer's (3,) totals.
+
+    in-zero is per-image (summed over the batch, read from tile 0);
+    out-zero sums every cell (each covers one channel tile); toggle is
+    batch element 0's whole-image raster (tile 0 of image 0).
+    """
+    return jnp.stack([jnp.sum(cells[:, 0, 0]),
+                      jnp.sum(cells[:, :, 1]),
+                      cells[0, 0, 2]])
 
 
 def _geometry(x, k: int, stride, padding: bool):
@@ -145,10 +207,24 @@ def _epilogue_operands(cout: int, t_lo, t_hi, flip, const, is_const, pool,
     return ep, (oh, ow), jnp.int8
 
 
+def _stats_outputs(emit_stats: bool, fuse: bool, n: int, tiles: int,
+                   out_spec, out_shape):
+    """Append the (N, tiles, 3) int32 per-cell counter output when asked."""
+    if not emit_stats:
+        return out_spec, out_shape
+    if not fuse:
+        raise ValueError("emit_stats requires the fused threshold "
+                         "epilogue (t_lo/t_hi/flip): raw int32 outputs "
+                         "have no trit statistics")
+    return ([out_spec, pl.BlockSpec((1, 1, 3), lambda i, j: (i, j, 0))],
+            [out_shape, jax.ShapeDtypeStruct((n, tiles, 3), jnp.int32)])
+
+
 def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
                           t_lo=None, t_hi=None, flip=None,
                           const=None, is_const=None, pool=None,
-                          bco: int = 128, interpret: bool = False):
+                          bco: int = 128, emit_stats: bool = False,
+                          interpret: bool = False):
     """NHWC trit conv.  x (N,H,W,Cin) int8, w (K,K,Cin,Cout) int8.
 
     Fused thresholds (t_lo/t_hi/flip per Cout) produce int8 trits; adding
@@ -156,8 +232,13 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
     and ``pool=("max"|"avg", win)`` applies merged pooling on the int32
     accumulator before the compare (paper Fig. 5).  Without thresholds the
     raw int32 pre-activations are returned.
+
+    ``emit_stats=True`` adds a per-grid-cell int32 counter output (see
+    `_cell_stats`) and returns ``(y, stats)`` where ``stats`` is the
+    layer's combined (3,) totals — (in-zero, out-zero, window-toggle) —
+    integer-identical to the traced per-layer statistics.
     """
-    n, _, _, cin = x.shape
+    n, h0, w0, cin = x.shape
     k, _, _, cout = w.shape
     x, oh, ow = _geometry(x, k, stride, padding)
     ph, pw = x.shape[1], x.shape[2]
@@ -170,9 +251,14 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
 
     kernel = functools.partial(
         _conv_kernel, k=k, stride=stride, oh=oh, ow=ow,
-        fuse_threshold=bool(ep), pool=pool)
+        fuse_threshold=bool(ep), pool=pool, emit_stats=emit_stats,
+        padding=padding, stats_hw=(h0, w0))
+    out_specs, out_shape = _stats_outputs(
+        emit_stats, bool(ep), n, cout // bco,
+        pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
+        jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype))
 
-    return pl.pallas_call(
+    got = pl.pallas_call(
         kernel,
         grid=(n, cout // bco),
         in_specs=[
@@ -180,28 +266,34 @@ def ternary_conv2d_pallas(x, w, *, stride=(1, 1), padding=True,
             pl.BlockSpec((k, k, cin, bco), lambda i, j: (0, 0, 0, j)),
             *ep_specs,
         ],
-        out_specs=pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x.astype(jnp.int8), w.astype(jnp.int8), *ep)
+    if emit_stats:
+        y, cells = got
+        return y, combine_cell_stats(cells)
+    return got
 
 
 def ternary_conv2d_packed_pallas(x, w_packed, *, k: int, cin: int,
                                  stride=(1, 1), padding=True,
                                  t_lo=None, t_hi=None, flip=None,
                                  const=None, is_const=None, pool=None,
-                                 bco: int = 128, interpret: bool = False):
+                                 bco: int = 128, emit_stats: bool = False,
+                                 interpret: bool = False):
     """Conv from packed weights: decode happens next to the compute.
 
     ``w_packed`` is (Cout, G) uint8 — each row one output channel's
     K*K*Cin weights at 5 trits/byte (`repro.core.codec.pack_filter_rows`).
     The kernel decodes its Cout tile in VMEM and runs the same taps +
     fused epilogue as the dense kernel; the dense weight tensor never
-    exists outside the kernel.
+    exists outside the kernel.  ``emit_stats`` as in
+    :func:`ternary_conv2d_pallas`.
     """
-    n = x.shape[0]
+    n, h0, w0 = x.shape[0], x.shape[1], x.shape[2]
     cout, g = w_packed.shape
     assert g * TRITS_PER_BYTE >= k * k * cin, (g, k, cin)
     x, oh, ow = _geometry(x, k, stride, padding)
@@ -215,9 +307,14 @@ def ternary_conv2d_packed_pallas(x, w_packed, *, k: int, cin: int,
 
     kernel = functools.partial(
         _packed_conv_kernel, k=k, cin=cin, stride=stride, oh=oh, ow=ow,
-        pool=pool)
+        pool=pool, emit_stats=emit_stats, padding=padding,
+        stats_hw=(h0, w0))
+    out_specs, out_shape = _stats_outputs(
+        emit_stats, bool(ep), n, cout // bco,
+        pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
+        jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype))
 
-    return pl.pallas_call(
+    got = pl.pallas_call(
         kernel,
         grid=(n, cout // bco),
         in_specs=[
@@ -225,9 +322,13 @@ def ternary_conv2d_packed_pallas(x, w_packed, *, k: int, cin: int,
             pl.BlockSpec((bco, g), lambda i, j: (j, 0)),
             *ep_specs,
         ],
-        out_specs=pl.BlockSpec((1, po, pq, bco), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, po, pq, cout), out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x.astype(jnp.int8), w_packed, *ep)
+    if emit_stats:
+        y, cells = got
+        return y, combine_cell_stats(cells)
+    return got

@@ -75,9 +75,19 @@ class Backend:
     produce trit outputs bit-identical to the ``ref`` backend.
 
     Backends may additionally implement ``build_program(program,
-    in_shape)`` returning a traceable ``fn(lowered, x) -> (out, recs)``
-    that executes the *whole* program; the pipeline prefers it for
-    untraced runs (Tracer hooks require per-layer boundaries).
+    in_shape, emit_stats=False)`` returning a traceable ``fn(lowered, x)
+    -> (out, recs)`` that executes the *whole* program; the pipeline
+    prefers it for untraced runs, and — with ``emit_stats=True``, where
+    ``recs`` becomes the (L, 3) int32 in-kernel counter block — for
+    tracers that declare ``kernel_stats`` (per-layer fallback is then
+    reserved for tracers that genuinely need every boundary).
+
+    ``apply_with_stats`` is the per-layer counterpart: one layer plus its
+    (3,) int32 counters (in-zero, out-zero, window-toggle — the
+    `repro.pipeline.tracer.layer_stat_counts` layout).  The base
+    implementation derives the counts from the activations with the jnp
+    oracle; kernel backends override it to emit them from inside the
+    ``pallas_call``.
     """
 
     name: str = "?"
@@ -87,6 +97,14 @@ class Backend:
 
     def apply(self, lowered: Any, x: Array, instr: engine.LayerInstr) -> Array:
         raise NotImplementedError
+
+    def apply_with_stats(self, lowered: Any, x: Array,
+                         instr: engine.LayerInstr):
+        """(y, (3,) int32 counters) for one layer; oracle fallback."""
+        from repro.pipeline.tracer import layer_stat_counts
+
+        y = self.apply(lowered, x, instr)
+        return y, layer_stat_counts(x, y, instr)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,7 +131,7 @@ class PallasBackend(Backend):
     def lower(self, instr):
         return {"w": instr.weights, "th": instr.thresholds}
 
-    def apply(self, lowered, x, instr):
+    def apply(self, lowered, x, instr, emit_stats: bool = False):
         from repro.kernels import ternary_conv2d as K
 
         th: folding.ChannelThresholds = lowered["th"]
@@ -121,7 +139,10 @@ class PallasBackend(Backend):
             x, lowered["w"], stride=instr.stride, padding=instr.padding,
             t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
             const=th.const, is_const=th.is_const, pool=instr.pool,
-            interpret=self.interpret)
+            emit_stats=emit_stats, interpret=self.interpret)
+
+    def apply_with_stats(self, lowered, x, instr):
+        return self.apply(lowered, x, instr, emit_stats=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +156,7 @@ class PackedBackend(Backend):
         return {"wp": codec.pack_filter_rows(instr.weights),
                 "th": instr.thresholds}
 
-    def apply(self, lowered, x, instr):
+    def apply(self, lowered, x, instr, emit_stats: bool = False):
         from repro.kernels import ternary_conv2d as K
 
         th: folding.ChannelThresholds = lowered["th"]
@@ -144,7 +165,10 @@ class PackedBackend(Backend):
             x, lowered["wp"], k=k, cin=cin, stride=instr.stride,
             padding=instr.padding, t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip,
             const=th.const, is_const=th.is_const, pool=instr.pool,
-            interpret=self.interpret)
+            emit_stats=emit_stats, interpret=self.interpret)
+
+    def apply_with_stats(self, lowered, x, instr):
+        return self.apply(lowered, x, instr, emit_stats=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,7 +196,17 @@ class FusedBackend(PallasBackend):
 
         return trunks.plan_segments(program, in_shape, self.vmem_budget)
 
-    def build_program(self, program: engine.CutieProgram, in_shape):
+    def build_program(self, program: engine.CutieProgram, in_shape,
+                      emit_stats: bool = False):
+        """Whole-program trunk-fused execution.
+
+        With ``emit_stats=True`` every segment also emits the per-layer
+        (3,) int32 switching counters — the fused trunks from inside
+        their megakernel, per-layer segments from the per-layer kernel —
+        and ``fn`` returns ``(out, counts)`` with ``counts`` the
+        program's (L, 3) block in layer order, ready for a
+        ``kernel_stats`` tracer's ``finalize_counts``.
+        """
         from repro.compiler import trunks
         from repro.kernels import fused_trunk as FT
 
@@ -202,6 +236,7 @@ class FusedBackend(PallasBackend):
 
         def fn(lowered, x):
             cur = x
+            counts = []                 # per-layer (3,) int32, in order
             for si, seg in enumerate(segments):
                 if seg.fused:
                     rng = range(seg.start, seg.stop)
@@ -222,10 +257,22 @@ class FusedBackend(PallasBackend):
                     cur = FT.fused_trunk_pallas(
                         cur, ws, *th, metas=metas[seg],
                         packed_in=packed_in, pack_out=packed_after[si],
+                        emit_stats=emit_stats,
+                        stats_cin=layers[seg.start].weights.shape[2],
                         interpret=self.interpret)
+                    if emit_stats:
+                        cur, seg_counts = cur
+                        counts.extend(seg_counts[i] for i in range(len(seg)))
                 else:
                     for i in range(seg.start, seg.stop):
-                        cur = self.apply(lowered[i], cur, layers[i])
+                        if emit_stats:
+                            cur, row = self.apply_with_stats(
+                                lowered[i], cur, layers[i])
+                            counts.append(row)
+                        else:
+                            cur = self.apply(lowered[i], cur, layers[i])
+            if emit_stats:
+                return cur, jnp.stack(counts)
             return cur, []
 
         return fn

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine
 from repro.pipeline import backends as B
@@ -180,41 +181,76 @@ class CutiePipeline:
     def shapes(self, in_shape) -> list[tuple]:
         return program_shapes(self.program, in_shape)
 
-    def execution_plan(self) -> dict:
-        """How this pipeline will execute a (tracer-less) run.
+    def execution_plan(self, in_shape=None, tracer: Tracer | None = None
+                       ) -> dict:
+        """How this pipeline will execute a run.
 
         ``mode`` is one of ``"sharded-per-layer"`` (mesh shard_map over
         each layer), ``"program"`` (the backend's whole-program build,
         e.g. fused trunk megakernels), ``"scan"`` (lax.scan over the
         stacked uniform layer FIFO) or ``"per-layer"`` (unrolled in one
-        jit).  ``reason`` says why that mode won, which is how the
-        fused-backend-on-a-mesh drop (per-layer wins over megakernels)
-        is surfaced instead of silently happening.
+        jit).  ``reason`` says why that mode won, and ``fallback`` names
+        the degradation when one happened — ``"mesh"`` (a program-level
+        backend dropped to per-layer shard_map) or ``"tracer"`` (a
+        tracer without a kernel-side mode forced per-layer boundaries);
+        None when the fastest available path runs.  Pass the ``tracer``
+        a run would use to see its effect; tracers with
+        ``kernel_stats = True`` (both built-ins) keep the program path.
+
+        With ``in_shape`` — and a backend that plans trunk segments —
+        the plan also carries ``segments``: one entry per execution
+        segment with its layer range, fused/per-layer disposition,
+        priced VMEM residency and the planner's *why* for every
+        non-fused segment or budget-clipped trunk (``"unpadded"`` /
+        ``"width-change"`` / ``"vmem-budget"`` / ``"short-run"``).
         """
         has_program = hasattr(self.backend, "build_program")
+        kernel_stats = (tracer is not None
+                        and getattr(tracer, "kernel_stats", False))
+        fallback = None
         if self._sharded is not None:
-            reason = ("mesh execution is per-layer shard_map; the "
-                      f"backend's program-level build is dropped"
-                      if has_program else
-                      "mesh= requested; per-layer shard_map")
+            if has_program:
+                reason = ("mesh execution is per-layer shard_map; the "
+                          "backend's program-level build is dropped")
+                fallback = "mesh"
+            else:
+                reason = "mesh= requested; per-layer shard_map"
             mode = "sharded-per-layer"
-        elif has_program:
-            mode, reason = "program", (
-                f"backend {self.backend.name!r} provides build_program "
-                "(whole-program megakernels)")
-        elif self.scannable:
-            mode, reason = "scan", ("uniform layer FIFO; lax.scan over "
-                                    "stacked layers")
+        elif has_program and (tracer is None or kernel_stats):
+            reason = (f"backend {self.backend.name!r} provides "
+                      "build_program (whole-program megakernels)")
+            if kernel_stats:
+                reason += "; tracer rows come from in-kernel counters"
+            mode = "program"
         else:
-            mode, reason = "per-layer", ("non-uniform program; unrolled "
-                                        "in one jit")
-        return {
+            if has_program and tracer is not None:
+                # a tracer without a kernel-side mode needs every
+                # per-layer boundary, so the program build is dropped
+                fallback = "tracer"
+            if self.scannable:
+                mode, reason = "scan", ("uniform layer FIFO; lax.scan "
+                                        "over stacked layers")
+            else:
+                mode, reason = "per-layer", ("non-uniform program; "
+                                             "unrolled in one jit")
+            if fallback == "tracer":
+                reason = (f"tracer {type(tracer).__name__} has no "
+                          "kernel-side mode (kernel_stats=False); the "
+                          f"program-level build is dropped — {reason}")
+        plan = {
             "mode": mode,
             "backend": self.backend_name,
             "mesh": str(self.mesh_spec) if self.mesh_spec else None,
             "scannable": self.scannable,
             "reason": reason,
+            "fallback": fallback,
         }
+        if in_shape is not None and hasattr(self.backend, "plan"):
+            plan["segments"] = [
+                {"start": s.start, "stop": s.stop, "fused": s.fused,
+                 "vmem_bytes": s.vmem_bytes, "reason": s.reason or None}
+                for s in self.backend.plan(self.program, tuple(in_shape))]
+        return plan
 
     def __repr__(self) -> str:
         mesh = f", mesh={self.mesh_spec}" if self.mesh_spec else ""
@@ -225,19 +261,28 @@ class CutiePipeline:
     # -- execution ----------------------------------------------------------
 
     def _build(self, tracer: Tracer | None, in_shape=None):
+        """Compile one jit specialization; returns ``(fn, kind)`` with
+        ``kind`` in {"program", "program+stats", "layers"} telling
+        ``run()`` how to interpret the records half of ``fn``'s output."""
         if self._sharded is not None:
             if tracer is not None:
                 raise NotImplementedError(
                     "tracers are not supported on meshed pipelines yet; "
                     "run an unsharded pipeline for stats/energy tracing")
-            return self._sharded.build()
-        if (tracer is None and in_shape is not None
-                and hasattr(self.backend, "build_program")):
+            return self._sharded.build(), "layers"
+        if in_shape is not None and hasattr(self.backend, "build_program"):
             # Program-level execution (e.g. the fused backend's trunk
-            # megakernels).  Tracer runs need every per-layer boundary,
-            # so they stay on the scan/unrolled paths below.
-            return jax.jit(self.backend.build_program(self.program,
-                                                      tuple(in_shape)))
+            # megakernels).  Tracers with a kernel-side mode ride on it
+            # — the kernels emit the (L, 3) integer counters next to the
+            # activations; only tracers that genuinely need every
+            # per-layer boundary fall through to the paths below.
+            if tracer is None:
+                return jax.jit(self.backend.build_program(
+                    self.program, tuple(in_shape))), "program"
+            if tracer.kernel_stats:
+                return jax.jit(self.backend.build_program(
+                    self.program, tuple(in_shape),
+                    emit_stats=True)), "program+stats"
         backend, layers = self.backend, self.program.layers
         if self.scannable:
             instr0 = layers[0]
@@ -261,7 +306,7 @@ class CutiePipeline:
                     cur = y
                 return cur, recs
 
-        return jax.jit(fn)
+        return jax.jit(fn), "layers"
 
     def _runner(self, x: Array, tracer: Tracer | None):
         key = (x.shape, str(x.dtype), tracer.cache_key if tracer else None)
@@ -281,11 +326,20 @@ class CutiePipeline:
         if self._sharded is not None:
             n = x.shape[0]
             x = self._sharded.pad_inputs(x)
-            out, _ = self._runner(x, tracer)(self._lowered, x)
+            fn, _ = self._runner(x, tracer)
+            out, _ = fn(self._lowered, x)
             return self._sharded.crop(out, n)
-        out, recs = self._runner(x, tracer)(self._lowered, x)
+        fn, kind = self._runner(x, tracer)
+        out, recs = fn(self._lowered, x)
         if tracer is None:
             return out
+        if kind == "program+stats":
+            # recs is the kernels' (L, 3) int32 counter block — the
+            # fused fast path priced its own stats.
+            counts = np.asarray(jax.device_get(recs))
+            rows = tracer.finalize_counts(self.program, counts,
+                                          self.shapes(x.shape))
+            return out, rows
         recs = jax.device_get(recs)
         if self.scannable:                 # dict of (L, ...) -> list of dicts
             recs = [{k: v[i] for k, v in recs.items()}
@@ -314,7 +368,8 @@ class CutiePipeline:
     # -- serving ------------------------------------------------------------
 
     def engine(self, scheduler="fcfs", *, model: str = "default",
-               buckets=None, head=None, tracer: Tracer | None = None):
+               buckets=None, head=None, tracer: Tracer | None = None,
+               trace: bool = True):
         """A `CutieEngine` serving this pipeline under ``model``.
 
         One submit -> schedule -> execute -> stream surface: pluggable
@@ -326,6 +381,6 @@ class CutiePipeline:
         """
         from repro.serving.engine import CutieEngine
 
-        eng = CutieEngine(scheduler)
+        eng = CutieEngine(scheduler, trace=trace)
         eng.register(model, self, buckets=buckets, head=head, tracer=tracer)
         return eng

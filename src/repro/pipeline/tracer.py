@@ -15,13 +15,58 @@ backend-equivalence tests pin down.
 Tracers must use only *static* metadata from the ``instr`` argument
 (shapes, stride, padding, pool); under ``lax.scan`` execution it is the
 template layer, whose threshold/weight arrays are not the scanned slices.
+
+**Kernel-side mode.**  Both built-in tracers are integer-exact: the
+traced half emits int32 *counts* (zero trits, window toggles) and the
+host half derives the float rows by dividing by static denominators.
+The Pallas kernels can emit the very same counts from inside the kernel
+(``emit_stats=True`` on `repro.kernels.ternary_conv2d` /
+`repro.kernels.fused_trunk`), so a tracer with ``kernel_stats = True``
+lets the pipeline keep the backend's whole-program build — the fused
+megakernel path — and feed the fetched (L, 3) counter block to
+``finalize_counts``: identical rows, no per-layer fallback.  The shared
+counter layout is ``(in_zero, out_zero, toggle)`` per layer (see
+:func:`layer_stat_counts`, the jnp oracle both paths are tested
+against).
 """
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 from repro.core import engine
+
+
+def layer_stat_counts(x, y, instr: engine.LayerInstr):
+    """The (3,) int32 counter oracle for one layer: what both the traced
+    path and the in-kernel counters must produce.
+
+    * ``in_zero``  — zero trits in the layer's (logical, unpadded) input,
+      over the whole batch,
+    * ``out_zero`` — zero trits in the layer's output, whole batch,
+    * ``toggle``   — (tap, channel) positions differing between
+      consecutive stride-1 raster windows of batch element 0's input
+      (`repro.energy.switching.window_toggle_count`; padded windows when
+      the layer pads).
+    """
+    import jax.numpy as jnp
+
+    from repro.energy import switching
+
+    return jnp.stack([
+        jnp.sum((x == 0).astype(jnp.int32), dtype=jnp.int32),
+        jnp.sum((y == 0).astype(jnp.int32), dtype=jnp.int32),
+        switching.window_toggle_count(x[0], instr.kernel_size,
+                                      padding=instr.padding),
+    ])
+
+
+def _n_windows(ishape, k: int, padding: bool) -> int:
+    """Stride-1 raster windows over one (H, W, C) image of ``ishape``."""
+    _, h, w, _ = ishape
+    return h * w if padding else (h - k + 1) * (w - k + 1)
 
 
 class Tracer:
@@ -31,7 +76,15 @@ class Tracer:
     layer-independent structure (so uniform programs can be scanned).
     ``finalize`` receives one fetched record per layer plus the inferred
     per-layer input shapes, and returns whatever the consumer wants.
+
+    ``kernel_stats = True`` declares that this tracer's rows can be
+    derived from the kernels' (L, 3) integer counter block alone, via
+    ``finalize_counts`` — the pipeline then keeps program-level
+    (megakernel) execution for traced runs instead of falling back to
+    per-layer boundaries.
     """
+
+    kernel_stats: bool = False
 
     def trace_layer(self, x, y, instr: engine.LayerInstr) -> dict:
         del x, y, instr
@@ -41,6 +94,12 @@ class Tracer:
                  in_shapes: list[tuple]) -> list[dict]:
         del program, in_shapes
         return records
+
+    def finalize_counts(self, program: engine.CutieProgram, counts,
+                        in_shapes: list[tuple]) -> list[dict]:
+        """Rows from the kernels' (L, 3) int32 counter block."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no kernel-side mode")
 
     @property
     def cache_key(self) -> str:
@@ -52,28 +111,32 @@ class StatsTracer(Tracer):
     """The engine's legacy per-layer stats as a tracer.
 
     Rows match ``engine.run_program(..., collect_stats=True)`` exactly:
-    in/out sparsity (traced), weight sparsity, shapes, kernel and the paper
-    op count (host side).
+    in/out sparsity (traced as exact zero counts), weight sparsity,
+    shapes, kernel and the paper op count (host side).
     """
+
+    kernel_stats = True
 
     def trace_layer(self, x, y, instr):
         import jax.numpy as jnp
 
         del instr
         return {
-            "in_sparsity": jnp.mean((x == 0).astype(jnp.float32)),
-            "out_sparsity": jnp.mean((y == 0).astype(jnp.float32)),
+            "in_zero": jnp.sum((x == 0).astype(jnp.int32),
+                               dtype=jnp.int32),
+            "out_zero": jnp.sum((y == 0).astype(jnp.int32),
+                                dtype=jnp.int32),
         }
 
-    def finalize(self, program, records, in_shapes):
+    def _rows(self, program, zeros, in_shapes):
         rows = []
-        for instr, rec, ishape, oshape in zip(
-                program.layers, records, in_shapes, in_shapes[1:]):
+        for instr, (in_zero, out_zero), ishape, oshape in zip(
+                program.layers, zeros, in_shapes, in_shapes[1:]):
             rows.append({
-                "in_sparsity": float(rec["in_sparsity"]),
+                "in_sparsity": int(in_zero) / math.prod(ishape),
                 "weight_sparsity": float(np.mean(
                     np.asarray(instr.weights) == 0, dtype=np.float32)),
-                "out_sparsity": float(rec["out_sparsity"]),
+                "out_sparsity": int(out_zero) / math.prod(oshape),
                 "in_shape": tuple(ishape),
                 "out_shape": tuple(oshape),
                 "kernel": tuple(instr.weights.shape),
@@ -81,31 +144,57 @@ class StatsTracer(Tracer):
             })
         return rows
 
+    def finalize(self, program, records, in_shapes):
+        return self._rows(program,
+                          [(r["in_zero"], r["out_zero"]) for r in records],
+                          in_shapes)
+
+    def finalize_counts(self, program, counts, in_shapes):
+        return self._rows(program, [(row[0], row[1]) for row in counts],
+                          in_shapes)
+
 
 class SwitchingTracer(Tracer):
     """Measured unrolled-machine toggle rates, feeding the energy model.
 
-    Traced half: the activation-window toggle probability of the first
-    batch element (`energy.switching.window_toggle` — the paper testbench's
-    annotated switching activity).  Host half: weight density + op counts.
-    Rows feed ``repro.energy.model.network_energy`` directly.
+    Traced half: the integer window-toggle count of the first batch
+    element (`energy.switching.window_toggle_count` — the paper
+    testbench's annotated switching activity).  Host half: weight
+    density + op counts + the division to toggle probabilities.  Rows
+    feed ``repro.energy.model.network_energy`` directly.
     """
+
+    kernel_stats = True
 
     def trace_layer(self, x, y, instr):
         from repro.energy import switching
 
         del y
-        return switching.window_toggle(
-            x[0], instr.kernel_size, padding=instr.padding)
+        return {"toggle": switching.window_toggle_count(
+            x[0], instr.kernel_size, padding=instr.padding)}
 
-    def finalize(self, program, records, in_shapes):
+    def _rows(self, program, toggles, in_shapes):
         rows = []
-        for instr, rec, ishape in zip(program.layers, records, in_shapes):
+        for instr, toggle, ishape in zip(program.layers, toggles,
+                                         in_shapes):
+            k = instr.kernel_size
+            cin = instr.weights.shape[2]
+            steps = _n_windows(ishape, k, instr.padding) - 1
+            toggle = int(toggle)
             rows.append({
                 "ops": engine.layer_ops(instr, ishape),
                 "weight_density": float(
                     np.mean(np.asarray(instr.weights) != 0)),
-                "act_toggle": float(rec["mult_toggle"]),
-                "window_hamming": float(rec["window_hamming"]),
+                "act_toggle": (toggle / (steps * k * k * cin)
+                               if steps > 0 else math.nan),
+                "window_hamming": (toggle / steps
+                                   if steps > 0 else math.nan),
             })
         return rows
+
+    def finalize(self, program, records, in_shapes):
+        return self._rows(program, [r["toggle"] for r in records],
+                          in_shapes)
+
+    def finalize_counts(self, program, counts, in_shapes):
+        return self._rows(program, [row[2] for row in counts], in_shapes)

@@ -44,6 +44,7 @@ from typing import Any, Iterator, Optional
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.serving.executors import ProgramExecutor
 from repro.serving.registry import ModelRegistry
 from repro.serving.request import Request, RequestHandle, RequestStatus
@@ -64,10 +65,19 @@ class CutieEngine:
 
     def __init__(self, scheduler="fcfs", *,
                  registry: Optional[ModelRegistry] = None,
-                 clock=time.monotonic, history: int = 100_000):
+                 clock=time.monotonic, history: int = 100_000,
+                 trace: bool = True):
         self.registry = registry or ModelRegistry()
         self.scheduler = get_scheduler(scheduler)
         self.clock = clock
+        # one observability sink for the whole engine: a request-
+        # lifecycle trace recorder (``trace=False`` disables it; the
+        # event buffer is bounded either way) + the metrics registry
+        # every component publishes into.  Executors share it via
+        # bind_obs at registration.
+        self.obs = _obs.Observability(trace=trace, clock=clock)
+        self.obs.trace.thread_name(0, "engine")
+        self.obs.metrics.collect("engine", self._publish_metrics)
         self._requests: dict[int, Request] = {}
         self._handles: dict[int, RequestHandle] = {}
         self._completed: deque[RequestHandle] = deque()
@@ -84,12 +94,52 @@ class CutieEngine:
         self._queue_depth: deque[int] = deque(maxlen=history)
         self._done: deque[Request] = deque(maxlen=history)
         self._energy_uj = 0.0
+        self._energy_seen = False    # distinguishes a measured 0.0 from
+        #                              "no executor ever priced a batch"
 
     # -- models -------------------------------------------------------------
 
     def register(self, name: str, source, **options):
         """Register (or hot-swap) a model; see ModelRegistry.register."""
-        return self.registry.register(name, source, **options)
+        executor = self.registry.register(name, source, **options)
+        executor.bind_obs(self.obs)
+        # keyed per model name: hot-swapping replaces the collector
+        # instead of leaking the predecessor's callback
+        self.obs.metrics.collect(f"executor:{name}",
+                                 lambda: self._publish_executor(name))
+        return executor
+
+    def _publish_executor(self, name: str) -> None:
+        """Gauge out one executor's ``extra_stats()`` numerics (the
+        paged-state block/prefix counters of LLM executors)."""
+        if name not in self.registry:
+            return
+        ex = self.registry[name]
+        stats = ex.extra_stats()
+        if stats:
+            g = self.obs.metrics.gauge(
+                "executor_stat", "executor-specific accounting "
+                "(Executor.extra_stats values, numeric leaves)")
+            for key, v in stats.items():
+                if isinstance(v, (int, float)):
+                    g.set(float(v), model=name, stat=key)
+        if isinstance(ex, ProgramExecutor):
+            self.obs.metrics.gauge(
+                "jit_variants", "compiled jit specializations per model"
+            ).set(ex.n_jit_variants, model=name)
+
+    def _publish_metrics(self) -> None:
+        """Engine-level gauges refreshed at every metrics snapshot."""
+        m = self.obs.metrics
+        m.gauge("queue_depth", "requests waiting in the scheduler").set(
+            len(self.scheduler))
+        m.gauge("requests_running", "requests admitted, not yet done").set(
+            sum(1 for r in self._requests.values()
+                if r.status is RequestStatus.RUNNING))
+        if self._energy_seen:
+            m.gauge("energy_uj_total", "cumulative per-request switching "
+                    "energy priced by tracing executors").set(
+                self._energy_uj)
 
     def models(self) -> list[str]:
         return self.registry.names()
@@ -128,6 +178,14 @@ class CutieEngine:
         handle = RequestHandle(self, req)
         self._requests[req.uid] = req
         self._handles[req.uid] = handle
+        self.obs.metrics.counter(
+            "requests_submitted_total",
+            "requests accepted by submit()").inc(model=model)
+        if self.obs.enabled:
+            self.obs.trace.thread_name(req.uid, f"req {req.uid} ({model})")
+            self.obs.trace.instant("submit", tid=req.uid, cat="request",
+                                   model=model)
+            self.obs.trace.begin("queued", tid=req.uid, cat="request")
         return handle
 
     def cancel(self, uid: int) -> bool:
@@ -140,6 +198,12 @@ class CutieEngine:
         req.status = RequestStatus.CANCELLED
         req.done_t = self.clock()
         self.n_cancelled += 1
+        self.obs.metrics.counter(
+            "requests_cancelled_total",
+            "queued requests cancelled before admission").inc(
+            model=req.model)
+        self.obs.trace.end("queued", tid=uid, cat="request",
+                           cancelled=True)
         return True
 
     # -- schedule + execute -------------------------------------------------
@@ -150,9 +214,12 @@ class CutieEngine:
         self._queue_depth.append(len(self.scheduler))
         capacities = {name: ex.free_capacity()
                       for name, ex in self.registry.items()}
-        picked = self.scheduler.next_batch(capacities, now)
+        with self.obs.trace.span("schedule", tid=0, cat="engine",
+                                 queued=len(self.scheduler)):
+            picked = self.scheduler.next_batch(capacities, now)
         admissions = {picked[0]: picked[1]} if picked else {}
         progressed = False
+        metrics = self.obs.metrics
         for name, executor in self.registry.items():
             reqs = admissions.get(name, [])
             if not reqs and not executor.has_resident():
@@ -161,12 +228,26 @@ class CutieEngine:
             for r in reqs:
                 r.status = RequestStatus.RUNNING
                 r.schedule_t = start
+                self.obs.trace.end("queued", tid=r.uid, cat="request")
+                self.obs.trace.begin("execute", tid=r.uid, cat="request",
+                                     model=name)
+                if r.queue_time is not None:
+                    metrics.histogram(
+                        "queue_time_seconds",
+                        "submit-to-admission wait per request").observe(
+                        r.queue_time, model=name)
+            self.obs.trace.begin("batch", tid=0, cat="engine", model=name,
+                                 live=len(reqs))
             try:
                 report = executor.execute(reqs)
             except Exception as err:
                 self._fail(reqs, err)
+                self.obs.trace.end("batch", tid=0, cat="engine",
+                                   error=repr(err))
                 raise
             done_t = self.clock()
+            self.obs.trace.end("batch", tid=0, cat="engine",
+                               live=report.live, padded=report.padded)
             self.n_batches += 1
             self.batches.append({
                 "model": name, "live": report.live,
@@ -174,8 +255,21 @@ class CutieEngine:
                 "rows": report.rows,
                 "per_device_live": report.per_device_live,
             })
+            metrics.counter("batches_total",
+                            "executor batches run").inc(model=name)
+            if report.padded:
+                metrics.histogram(
+                    "batch_occupancy", "live/padded fill of executed "
+                    "batches", buckets=(0.125, 0.25, 0.375, 0.5, 0.625,
+                                        0.75, 0.875, 1.0)).observe(
+                    report.live / report.padded, model=name)
             if report.energy_uj is not None:
                 self._energy_uj += report.energy_uj * report.live
+                self._energy_seen = True
+                metrics.counter(
+                    "energy_uj_spent_total", "switching energy priced "
+                    "by tracing executors (uJ)").inc(
+                    report.energy_uj * report.live, model=name)
             for uid, result in report.completions:
                 req = self._requests[uid]
                 req.result = result
@@ -184,6 +278,15 @@ class CutieEngine:
                 self.n_done += 1
                 self._done.append(req)
                 self._completed.append(self._handles[uid])
+                self.obs.trace.end("execute", tid=uid, cat="request")
+                metrics.counter("requests_completed_total",
+                                "requests finished successfully").inc(
+                    model=name)
+                if req.latency is not None:
+                    metrics.histogram(
+                        "request_latency_seconds",
+                        "submit-to-done latency per request").observe(
+                        req.latency, model=name)
             progressed = True
         return progressed
 
@@ -196,6 +299,12 @@ class CutieEngine:
             r.error = err
             r.done_t = done_t
             self._completed.append(self._handles[r.uid])
+            self.obs.trace.end("execute", tid=r.uid, cat="request",
+                               error=repr(err))
+            self.obs.metrics.counter(
+                "requests_failed_total",
+                "requests failed by an executor error").inc(
+                model=r.model)
 
     def busy(self) -> bool:
         """Queued or resident work remains."""
@@ -216,11 +325,16 @@ class CutieEngine:
         """Yield handles in completion order, stepping until idle."""
         for _ in range(max_steps):
             while self._completed:
-                yield self._completed.popleft()
+                yield self._pop_completed()
             if not self.busy() or not self.step():
                 break
         while self._completed:
-            yield self._completed.popleft()
+            yield self._pop_completed()
+
+    def _pop_completed(self) -> RequestHandle:
+        handle = self._completed.popleft()
+        self.obs.trace.instant("stream", tid=handle.uid, cat="request")
+        return handle
 
     # -- accounting ---------------------------------------------------------
 
@@ -314,7 +428,9 @@ class CutieEngine:
             "sharding": sharding or None,
             "deadline_met_frac": (sum(met) / len(met)) if met else None,
             "by_tag": by_tag,
-            "energy_uj": self._energy_uj if self._energy_uj else None,
+            # _energy_seen (not truthiness) so a measured 0.0 uJ — e.g. an
+            # all-zero activation trace — reports as 0.0, not "untraced"
+            "energy_uj": self._energy_uj if self._energy_seen else None,
             "jit_variants": jit_variants,
             "paged_state": paged_state or None,
         }
@@ -324,6 +440,22 @@ class CutieEngine:
         return [b["rows"] for b in self.batches
                 if b["rows"] is not None
                 and (model is None or b["model"] == model)]
+
+    # -- observability exports ----------------------------------------------
+
+    def trace_export(self, path=None) -> dict:
+        """The engine's request-lifecycle trace as Chrome/Perfetto
+        trace-event JSON (load at ui.perfetto.dev or chrome://tracing);
+        writes ``path`` when given, returns the trace dict either way."""
+        return self.obs.trace_export(path)
+
+    def metrics_snapshot(self) -> dict:
+        """Point-in-time metrics registry snapshot (nested dict)."""
+        return self.obs.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Metrics in Prometheus text exposition format."""
+        return self.obs.metrics.prometheus_text()
 
     def __repr__(self) -> str:
         return (f"CutieEngine(scheduler={self.scheduler.name!r}, "

@@ -27,6 +27,8 @@ from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
+from repro import obs as _obs
+
 
 @dataclasses.dataclass
 class ExecutionReport:
@@ -41,7 +43,19 @@ class ExecutionReport:
 
 
 class Executor:
-    """One registered model's execution strategy."""
+    """One registered model's execution strategy.
+
+    ``obs`` is the observability sink (`repro.obs.Observability`) the
+    executor emits trace spans and metrics into; it defaults to the
+    module-level no-op `repro.obs.NULL`, and the serving engine rebinds
+    it (``bind_obs``) at registration so standalone executors cost
+    nothing while engine-owned ones share the engine's recorder.
+    """
+
+    obs = _obs.NULL
+
+    def bind_obs(self, obs) -> None:
+        self.obs = obs
 
     def validate(self, value):
         """Canonicalize one submitted input; raise on bad requests.
@@ -166,7 +180,17 @@ class ProgramExecutor(Executor):
         batch = np.zeros((size,) + self._shape, np.int8)
         for i, req in enumerate(requests):
             batch[i] = req.value
+        variants_before = self.pipeline.n_jit_variants
         out = self.pipeline.run(jnp.asarray(batch), tracer=self.tracer)
+        if self.pipeline.n_jit_variants > variants_before:
+            # a fresh jit specialization compiled inside this batch —
+            # the latency outlier a trace should be able to explain
+            self.obs.trace.instant(
+                "jit_compile", cat="jit", bucket=size,
+                n_variants=self.pipeline.n_jit_variants)
+            self.obs.metrics.counter(
+                "jit_compiles_total",
+                "jit specializations compiled during serving").inc()
         rows = None
         if self.tracer is not None:
             out, rows = out

@@ -118,7 +118,7 @@ class LLMExecutor(Executor):
         self.blocks_per_seq = scfg.max_len // bs
         nb = scfg.num_blocks or 1 + (scfg.n_slots + 2) * self.blocks_per_seq
         self.cache = PrefixCache()
-        self.pool = BlockPool(nb, on_evict=self.cache.drop)
+        self.pool = BlockPool(nb, on_evict=self._on_evict)
 
         if scfg.paged:
             self._init_paged(nb)
@@ -170,6 +170,15 @@ class LLMExecutor(Executor):
 
         self._decode_fn = jax.jit(step)
 
+    def _on_evict(self, bid: int, h: str) -> None:
+        """LRU eviction callback: drop the cache mapping, leave a trace
+        event so cache-pressure stalls are visible on the timeline."""
+        self.cache.drop(bid, h)
+        self.obs.trace.instant("prefix_evict", cat="prefix", block=bid)
+        self.obs.metrics.counter(
+            "prefix_evictions_total",
+            "cached blocks evicted under pool pressure").inc()
+
     # -- engine protocol ----------------------------------------------------
 
     def validate(self, prompt) -> np.ndarray:
@@ -205,7 +214,11 @@ class LLMExecutor(Executor):
         completions: list = []
         if live == 0:
             return ExecutionReport(completions, 0, self.scfg.n_slots)
-        nxt = self.decode()
+        with self.obs.trace.span("decode", tid=0, cat="llm", live=live):
+            nxt = self.decode()
+        self.obs.trace.counter("blocks", {
+            "active": self.pool.n_active, "cached": self.pool.n_cached,
+            "free": self.pool.n_free})
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -247,6 +260,8 @@ class LLMExecutor(Executor):
         slot = self.slots.index(None)
         plen = len(tokens)
         self.prefill_tokens += plen
+        self.obs.trace.begin("prefill", tid=uid, cat="request",
+                             prompt_len=plen)
         if self.is_ssm:
             res = self._prefill_ssm(uid, slot, tokens)
         elif self.scfg.paged:
@@ -254,6 +269,20 @@ class LLMExecutor(Executor):
         else:
             res = self._prefill_contiguous(uid, slot, tokens)
         self.prefill_tokens_computed += res.tokens_computed
+        cached = res.prefix.common_prefix_tokens
+        self.obs.trace.end("prefill", tid=uid, cat="request",
+                           cached=cached, computed=res.tokens_computed)
+        self.obs.trace.instant("prefix_hit" if cached else "prefix_miss",
+                               tid=uid, cat="prefix", tokens=cached)
+        self.obs.metrics.counter(
+            "prefix_lookups_total", "prompt prefixes looked up in the "
+            "block cache").inc(outcome="hit" if cached else "miss")
+        self.obs.metrics.counter(
+            "prefill_tokens_total", "prompt tokens by whether the prefix "
+            "cache served them").inc(cached, source="cached")
+        self.obs.metrics.counter(
+            "prefill_tokens_total", "prompt tokens by whether the prefix "
+            "cache served them").inc(res.tokens_computed, source="computed")
         self.pos = self.pos.at[slot].set(plen)
         self.cur_tok = self.cur_tok.at[slot, 0].set(res.first_token)
         return res

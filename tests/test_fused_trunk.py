@@ -337,8 +337,9 @@ def test_fused_backend_small_budget_multi_trunk_bit_identical():
 
 
 def test_fused_backend_traced_run_matches_ref_stats():
-    """Tracers need per-layer boundaries: the fused backend falls back to
-    per-layer kernels there and must keep stats identical."""
+    """A kernel_stats tracer rides the fused program itself: per-layer
+    integer counters come back from inside the megakernel, and the rows
+    derived from them must be identical to the ref backend's."""
     prog = _cifar_like_program(seed=35, c=8, cin=8)
     x = _trits(jax.random.PRNGKey(36), (1, 32, 32, 8))
     y_ref, rows_ref = CutiePipeline(prog, backend="ref").run(

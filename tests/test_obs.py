@@ -1,0 +1,449 @@
+"""`repro.obs`: lifecycle tracing, unified metrics, in-kernel counters.
+
+Three legs under test:
+
+* the metrics registry (counter/gauge/histogram semantics, keyed
+  collectors, snapshot + Prometheus text export) and the trace recorder
+  (span nesting, Perfetto trace-event schema, the validator's accept
+  and reject paths);
+* the in-kernel switching counters: every kernel path (per-layer dense,
+  packed-weight, fused megakernel) emits per-layer (in_zero, out_zero,
+  window_toggle) int32 counters that equal the jnp oracle **exactly** —
+  integers, no tolerance — so a kernel_stats tracer's rows on the fused
+  fast path are bit-identical to the per-layer traced path, energy
+  included;
+* the serving engine's request-lifecycle trace + metrics surface, the
+  `_energy_seen` fix (a measured 0.0 uJ is not "untraced"), and
+  `execution_plan()` naming *why* a segment or mode degraded.
+"""
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler, obs
+from repro.core import engine
+from repro.kernels import ternary_conv2d as K
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       TraceRecorder, validate_trace)
+from repro.pipeline import (CutiePipeline, FusedBackend, StatsTracer,
+                            SwitchingTracer)
+from repro.pipeline.tracer import layer_stat_counts
+
+
+def _layer(key, cin, cout, *, pool=None, stride=(1, 1), padding=True,
+           const_frac=0.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (3, 3, cin, cout))
+    gamma = jax.random.normal(k2, (cout,)) + 0.5
+    if const_frac:
+        gamma = jnp.where(jax.random.bernoulli(k3, const_frac, (cout,)),
+                          0.0, gamma)
+    bn = {"gamma": gamma, "beta": jnp.zeros((cout,)),
+          "mean": jnp.zeros((cout,)), "var": jnp.ones((cout,))}
+    return engine.compile_layer(w, bn, pool=pool, stride=stride,
+                                padding=padding)
+
+
+def _trits(key, shape):
+    return jax.random.randint(key, shape, -1, 2).astype(jnp.int8)
+
+
+def _instance(c):
+    return engine.CutieInstance(n_i=c, n_o=c)
+
+
+def _cifar_like_program(seed=31, c=16, cin=10):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    pools = [None, None, ("max", 2), None, ("max", 2), None, ("max", 2),
+             ("avg", 4)]
+    layers = [_layer(ks[0], cin, c, pool=pools[0], const_frac=0.1)]
+    layers += [_layer(k, c, c, pool=p, const_frac=0.1)
+               for k, p in zip(ks[1:], pools[1:])]
+    return engine.CutieProgram(layers, _instance(c))
+
+
+def _residual_program(seed=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    g = compiler.Graph(in_channels=6, in_hw=(12, 12))
+    s = g.conv(jax.random.normal(ks[0], (3, 3, 6, 20)),
+               _bn(20, ks[3]))
+    h = g.conv(jax.random.normal(ks[1], (3, 3, 20, 20)), _bn(20, ks[4]))
+    g.add(h, s)
+    g.conv(jax.random.normal(ks[2], (3, 3, 20, 10)), _bn(10, ks[5]))
+    return compiler.compile_graph(g).program
+
+
+def _bn(c, key):
+    return {"gamma": jax.random.normal(key, (c,)) + 0.5,
+            "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
+            "var": jnp.ones((c,))}
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_labels_and_monotonicity():
+    c = Counter("reqs", "requests")
+    c.inc(model="a")
+    c.inc(2.0, model="a")
+    c.inc(model="b")
+    assert c.value(model="a") == 3.0
+    assert c.value(model="b") == 1.0
+    assert c.value(model="missing") == 0.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0, model="a")
+
+
+def test_gauge_last_write_wins():
+    g = Gauge("depth")
+    g.set(4)
+    g.set(2)
+    assert g.value() == 2.0
+    assert g.value(other="label") is None
+
+
+def test_histogram_buckets_are_cumulative():
+    h = Histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["sum"] == pytest.approx(6.05)
+    assert s["buckets"][0.1] == 1
+    assert s["buckets"][1.0] == 3
+    assert s["buckets"][math.inf] == 4
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_keyed_collectors_replace_not_accumulate():
+    reg = MetricsRegistry()
+    reg.collect("k", lambda: reg.gauge("v").set(1))
+    reg.collect("k", lambda: reg.gauge("v").set(2))   # hot-swap
+    snap = reg.snapshot()
+    assert snap["v"]["series"][""] == 2.0
+    reg.drop_collector("k")
+    reg.counter("n").inc()
+    assert "n" in reg.snapshot()
+
+
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("done_total", "finished").inc(3, model="cnn")
+    reg.histogram("lat", buckets=(1.0,)).observe(0.5)
+    text = reg.prometheus_text()
+    assert "# HELP done_total finished" in text
+    assert "# TYPE done_total counter" in text
+    assert 'done_total{model="cnn"} 3.0' in text
+    assert 'lat_bucket{le="1.0"} 1' in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_sum 0.5" in text and "lat_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# trace recorder + validator
+# ---------------------------------------------------------------------------
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    return clock
+
+
+def test_recorder_spans_and_export_roundtrip(tmp_path):
+    rec = TraceRecorder(clock=_fake_clock())
+    rec.thread_name(0, "engine")
+    with rec.span("outer", tid=0):
+        rec.instant("mark", tid=0, detail=1)
+    path = tmp_path / "t.json"
+    trace = rec.export(str(path))
+    assert json.loads(path.read_text()) == trace
+    info = validate_trace(trace)
+    assert info["n_spans"] == 1 and info["n_events"] >= 4
+
+
+def test_disabled_recorder_emits_nothing():
+    rec = TraceRecorder(enabled=False)
+    rec.begin("a")
+    rec.end("a")
+    rec.instant("b")
+    assert rec.export()["traceEvents"] == []
+
+
+def test_recorder_bounds_event_buffer():
+    rec = TraceRecorder(clock=_fake_clock(), max_events=3)
+    for _ in range(5):
+        rec.instant("x")
+    assert len(rec.export()["traceEvents"]) == 3
+    assert rec.dropped == 2
+
+
+def test_validator_rejects_unbalanced_and_nonmonotonic():
+    rec = TraceRecorder(clock=_fake_clock())
+    rec.begin("open", tid=1)
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_trace(rec.export())
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "i", "s": "t", "pid": 1, "tid": 0, "ts": 10},
+        {"name": "b", "ph": "i", "s": "t", "pid": 1, "tid": 0, "ts": 5}]}
+    with pytest.raises(ValueError, match="non-decreasing"):
+        validate_trace(bad)
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_trace({"traceEvents": []})
+
+
+def test_validator_requires_complete_request_spans():
+    rec = TraceRecorder(clock=_fake_clock())
+    rec.instant("submit", tid=7, cat="request")
+    with pytest.raises(ValueError, match="request"):
+        validate_trace(rec.export())
+
+
+# ---------------------------------------------------------------------------
+# in-kernel counters == jnp oracle, integer for integer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pool,stride,padding", [
+    (None, (1, 1), True), (None, (2, 2), True), (None, (1, 1), False),
+    (("max", 2), (1, 1), True), (("avg", 2), (1, 1), True)])
+def test_per_layer_kernel_counters_match_oracle(pool, stride, padding):
+    instr = _layer(jax.random.PRNGKey(hash((pool, stride, padding)) % 997),
+                   8, 16, pool=pool, stride=stride, padding=padding,
+                   const_frac=0.2)
+    x = _trits(jax.random.PRNGKey(5), (2, 13, 13, 8))
+    th = instr.thresholds
+    y, counts = K.ternary_conv2d_pallas(
+        x, instr.weights, stride=stride, padding=padding,
+        t_lo=th.t_lo, t_hi=th.t_hi, flip=th.flip, const=th.const,
+        is_const=th.is_const, pool=pool, emit_stats=True, interpret=True)
+    want = np.asarray(layer_stat_counts(x, y, instr))
+    assert counts.dtype == jnp.int32
+    assert np.array_equal(np.asarray(counts), want)
+
+
+def test_packed_kernel_counters_match_oracle():
+    from repro.core import codec
+
+    instr = _layer(jax.random.PRNGKey(11), 6, 12, pool=("max", 2))
+    x = _trits(jax.random.PRNGKey(12), (2, 12, 12, 6))
+    th = instr.thresholds
+    y, counts = K.ternary_conv2d_packed_pallas(
+        x, codec.pack_filter_rows(instr.weights), k=3, cin=6,
+        stride=(1, 1), padding=True, t_lo=th.t_lo, t_hi=th.t_hi,
+        flip=th.flip, const=th.const, is_const=th.is_const,
+        pool=("max", 2), emit_stats=True, interpret=True)
+    want = np.asarray(layer_stat_counts(x, y, instr))
+    assert np.array_equal(np.asarray(counts), want)
+
+
+def test_fused_program_counters_match_oracle_per_layer():
+    """The megakernel's (L, 3) counter block equals the layer-by-layer
+    oracle computed on the ref backend's intermediate activations."""
+    prog = _cifar_like_program(seed=41, c=16, cin=10)
+    x = _trits(jax.random.PRNGKey(42), (2, 32, 32, 10))
+    be = FusedBackend(interpret=True)
+    lowered = [be.lower(li) for li in prog.layers]
+    fn = be.build_program(prog, x.shape, emit_stats=True)
+    out, counts = fn(lowered, x)
+    counts = np.asarray(counts)
+    cur = x
+    for i, li in enumerate(prog.layers):
+        nxt = CutiePipeline(engine.CutieProgram([li], prog.instance),
+                            backend="ref").run(cur)
+        want = np.asarray(layer_stat_counts(cur, nxt, li))
+        assert np.array_equal(counts[i], want), f"layer {i}"
+        cur = nxt
+    assert np.array_equal(np.asarray(out), np.asarray(cur))
+
+
+# ---------------------------------------------------------------------------
+# kernel-stats tracers: fused fast path == per-layer traced path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_prog,in_shape", [
+    (lambda: _cifar_like_program(seed=51, c=16, cin=10), (2, 32, 32, 10)),
+    (lambda: _residual_program(), (2, 12, 12, 6)),
+])
+@pytest.mark.parametrize("tracer_cls", [StatsTracer, SwitchingTracer])
+def test_fused_traced_rows_identical_to_ref(make_prog, in_shape,
+                                            tracer_cls):
+    prog = make_prog()
+    x = _trits(jax.random.PRNGKey(52), in_shape)
+    y_ref, rows_ref = CutiePipeline(prog, backend="ref").run(
+        x, tracer=tracer_cls())
+    pipe = CutiePipeline(prog, backend="fused")
+    assert pipe.execution_plan(tracer=tracer_cls())["mode"] == "program"
+    y, rows = pipe.run(x, tracer=tracer_cls())
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref))
+    assert rows == rows_ref          # floats derived from equal ints
+
+
+def test_fused_energy_matches_per_layer_traced_path():
+    from repro.energy import model as E
+
+    prog = _cifar_like_program(seed=61, c=16, cin=10)
+    x = _trits(jax.random.PRNGKey(62), (1, 32, 32, 10))
+    _, rows_ref = CutiePipeline(prog, backend="ref").run(
+        x, tracer=SwitchingTracer())
+    _, rows = CutiePipeline(prog, backend="fused").run(
+        x, tracer=SwitchingTracer())
+    params = E.EnergyParams(prog.instance.technology)
+    e_ref = E.network_energy(rows_ref, params)["energy_uj"]
+    e = E.network_energy(rows, params)["energy_uj"]
+    assert e == e_ref                # exact: same integer numerators
+
+
+# ---------------------------------------------------------------------------
+# serving engine: lifecycle trace + metrics + energy flag
+# ---------------------------------------------------------------------------
+
+
+def _cnn_program(c=8, depth=2, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), depth)
+    return engine.CutieProgram(
+        [_layer(k, c, c) for k in keys], _instance(c))
+
+
+def _served_engine(tracer=None, backend="ref"):
+    pipe = CutiePipeline(_cnn_program(), backend=backend)
+    eng = pipe.engine("fcfs", buckets=(1, 2), tracer=tracer)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(-1, 2, (8, 8, 8)).astype(np.int8))
+    return eng
+
+
+def test_engine_trace_export_validates(tmp_path):
+    eng = _served_engine()
+    list(eng.stream())
+    trace = eng.trace_export(str(tmp_path / "t.json"))
+    info = validate_trace(trace)
+    assert info["n_request_tracks"] == 3
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert {"submit", "queued", "schedule", "batch", "execute",
+            "stream"} <= names
+
+
+def test_engine_trace_disabled_costs_nothing():
+    pipe = CutiePipeline(_cnn_program())
+    eng = pipe.engine("fcfs", buckets=(1,), trace=False)
+    eng.submit(np.zeros((8, 8, 8), np.int8))
+    eng.run()
+    assert eng.trace_export()["traceEvents"] == []
+    # metrics still work with tracing off
+    assert eng.metrics_snapshot()["requests_completed_total"]["series"]
+
+
+def test_engine_metrics_surface():
+    eng = _served_engine()
+    eng.run()
+    snap = eng.metrics_snapshot()
+    assert snap["requests_submitted_total"]["series"][
+        '{model="default"}'] == 3.0
+    assert snap["requests_completed_total"]["series"][
+        '{model="default"}'] == 3.0
+    lat = snap["request_latency_seconds"]["series"]['{model="default"}']
+    assert lat["count"] == 3
+    text = eng.metrics_text()
+    assert "# TYPE request_latency_seconds histogram" in text
+
+
+def test_engine_energy_none_until_traced_then_exact():
+    eng = _served_engine()                       # no tracer: never priced
+    eng.run()
+    assert eng.stats()["energy_uj"] is None
+    traced = _served_engine(tracer=SwitchingTracer())
+    traced.run()
+    assert traced.stats()["energy_uj"] is not None
+
+
+def test_engine_measured_zero_energy_is_not_untraced():
+    """The satellite fix: truthiness conflated a measured 0.0 uJ with
+    'no executor ever priced a batch'."""
+    eng = _served_engine(tracer=SwitchingTracer())
+    eng.run()
+    eng._energy_uj = 0.0                         # as if all-zero trace
+    assert eng.stats()["energy_uj"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# execution_plan: why each segment / mode degraded
+# ---------------------------------------------------------------------------
+
+
+def test_execution_plan_reports_tracer_fallback():
+    class BoundaryTracer(StatsTracer):
+        kernel_stats = False
+
+    pipe = CutiePipeline(_cnn_program(), backend="fused")
+    plan = pipe.execution_plan(tracer=BoundaryTracer())
+    assert plan["mode"] in ("scan", "per-layer")
+    assert plan["fallback"] == "tracer"
+    assert "kernel_stats" in plan["reason"]
+    # kernel_stats tracers keep the fast path
+    kept = pipe.execution_plan(tracer=StatsTracer())
+    assert kept["mode"] == "program" and kept["fallback"] is None
+    assert "in-kernel counters" in kept["reason"]
+
+
+def test_execution_plan_reports_mesh_fallback():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        pipe = CutiePipeline(_cnn_program(), backend="fused", mesh=1)
+    plan = pipe.execution_plan()
+    assert plan["mode"] == "sharded-per-layer"
+    assert plan["fallback"] == "mesh"
+
+
+def test_execution_plan_segment_reasons():
+    # a natural-boundary fused trunk, then width-change + unpadded
+    # per-layer leftovers: each names why it could not fuse
+    ks = jax.random.split(jax.random.PRNGKey(71), 6)
+    layers = [_layer(ks[0], 8, 8), _layer(ks[1], 8, 8),
+              _layer(ks[2], 8, 16),                       # width change
+              _layer(ks[3], 16, 16, padding=False)]       # unpadded
+    prog = engine.CutieProgram(layers, _instance(16))
+    pipe = CutiePipeline(prog, backend="fused")
+    segs = pipe.execution_plan(in_shape=(1, 12, 12, 8))["segments"]
+    assert [s["fused"] for s in segs] == [True, False]
+    assert segs[0]["reason"] is None             # natural boundary
+    assert "unpadded" in segs[1]["reason"]
+
+    # a lone layer whose would-be successor changes width says so
+    mixed = engine.CutieProgram(
+        [_layer(ks[4], 8, 16), _layer(ks[5], 16, 8),
+         _layer(ks[0], 8, 8, padding=False)], _instance(16))
+    msegs = CutiePipeline(mixed, backend="fused").execution_plan(
+        in_shape=(1, 12, 12, 8))["segments"]
+    assert "width-change" in msegs[0]["reason"]
+    assert "unpadded" in msegs[0]["reason"]
+
+    # a budget too tight to pair layers surfaces as "vmem-budget"
+    uniform = engine.CutieProgram(
+        [_layer(k, 8, 8) for k in ks[:3]], _instance(8))
+    budget = compiler.trunk_vmem_bytes(uniform.layers[:1],
+                                       (1, 12, 12, 8)) + 1
+    tight = CutiePipeline(uniform, backend=FusedBackend(vmem_budget=budget))
+    tsegs = tight.execution_plan(in_shape=(1, 12, 12, 8))["segments"]
+    assert any(s["reason"] and "vmem-budget" in s["reason"]
+               for s in tsegs)
