@@ -39,7 +39,8 @@ import traceback
 from benchmarks import (backend_parity, compiler_report, fig6_channels,
                         fig10_switching, fig11_energy, llm_serving,
                         roofline_report, serving_load, sharding_scaling,
-                        table2_tiling, table4_strategies, table5_sota)
+                        spec_decode, table2_tiling, table4_strategies,
+                        table5_sota)
 
 HEAVY = {"table4", "fig11", "compiler"}
 
@@ -56,6 +57,7 @@ BENCHES = {
     "serving": serving_load,
     "sharding": sharding_scaling,
     "llm_serving": llm_serving,
+    "spec_decode": spec_decode,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

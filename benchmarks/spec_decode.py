@@ -1,0 +1,200 @@
+"""Speculative decoding over the paged-state executor.
+
+Replays one seeded shared-prefix Poisson trace (same open-loop
+step-time replay as `benchmarks.llm_serving`) against the same target
+model served two ways:
+
+* **plain**: the paged `LLMExecutor`, one token per sequence per step;
+* **spec**: `SpecExecutor` with a layer-truncated draft (the target's
+  first layer + shared embeddings/head) proposing up to ``k_max``
+  tokens per sequence per step, verified in one batched target forward.
+
+Headlines (host-invariant, recorded in BENCH_spec_decode.json):
+
+* greedy speculative output is **bit-identical** to plain decode —
+  speculation changes step count, never tokens (gated under --compare);
+* ``tokens_per_step`` (tokens per *sequence*-step, from
+  ``engine.stats()``) exceeds 1.0 — accepted proposals turn sequential
+  decode steps into multi-token commits;
+* the spec engine drains the same trace in fewer engine steps
+  (``step_speedup`` >= 1, an intra-run ratio immune to host noise).
+
+CLI (used by the CI smoke job via benchmarks.run):
+
+    PYTHONPATH=src python benchmarks/spec_decode.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import transformer as TF
+from repro.models.config import reduce_for_smoke
+from repro.serving import (CutieEngine, LLMExecutor, ServerConfig,
+                           SpecConfig, SpecExecutor)
+
+PREFIX_FAMILIES = 2
+PREFIX_TOKENS = 24          # 3 full blocks at block_size=8
+SUFFIX_TOKENS = 4           # per-request novel tail
+ARRIVAL_RATE = 0.5          # requests per engine step (Poisson)
+
+THROUGHPUT_METRICS = {
+    "spec.tokens_per_step": "higher",
+    "spec.acceptance_rate": "higher",
+}
+INFO_METRICS = {
+    "spec.decode_tokens_per_s": "higher",
+    "plain.decode_tokens_per_s": "higher",
+}
+SPEED_CHECKS = ("greedy_exact", "tokens_per_step_above_one",
+                "fewer_engine_steps")
+
+
+def _models(smoke: bool):
+    """Target + its layer-truncated draft (first layer, shared
+    embeddings/norm/head) — a real draft/target pair whose agreement is
+    partial, so acceptance, mid-run rejection and k exhaustion all
+    occur on the trace."""
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=2)
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = cfg.replace(n_layers=1)
+    dparams = dict(params,
+                   layers=jax.tree.map(lambda a: a[:1], params["layers"]))
+    return params, cfg, dparams, dcfg
+
+
+def _server_config() -> ServerConfig:
+    return ServerConfig(paged=True, n_slots=4, max_len=64, block_size=8,
+                        max_new_tokens=8, temperature=0.0)
+
+
+def _trace(n: int, seed: int) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(1, 90, size=PREFIX_TOKENS)
+                for _ in range(PREFIX_FAMILIES)]
+    t = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE, size=n))
+    return [{"t": float(t[i]),
+             "prompt": np.concatenate([
+                 prefixes[int(rng.integers(PREFIX_FAMILIES))],
+                 rng.integers(1, 90, size=SUFFIX_TOKENS)]).astype(np.int32)}
+            for i in range(n)]
+
+
+def _drive(eng: CutieEngine, trace: list[dict],
+           max_steps: int = 100_000) -> int:
+    i, steps = 0, 0
+    while i < len(trace) or eng.busy():
+        while i < len(trace) and trace[i]["t"] <= steps:
+            eng.submit(trace[i]["prompt"], model="llm")
+            i += 1
+        if eng.busy() and not eng.step():
+            raise RuntimeError("engine busy but made no progress")
+        steps += 1
+        if steps > max_steps:
+            raise RuntimeError(f"trace did not drain in {max_steps} steps")
+    return steps
+
+
+def _serve(ex, trace: list[dict]) -> tuple[dict, dict]:
+    eng = CutieEngine("fcfs")
+    eng.register("llm", ex)
+    t0 = time.perf_counter()
+    steps = _drive(eng, trace)
+    wall = time.perf_counter() - t0
+    results = eng.run()
+    n_tokens = sum(len(v) for v in results.values())
+    tps = (eng.stats()["tokens_per_step"] or {}).get("llm")
+    metrics = {
+        "engine_steps": steps,
+        "generated_tokens": n_tokens,
+        "decode_tokens_per_s": n_tokens / max(wall, 1e-9),
+        "tokens_per_step": tps,
+    }
+    spec_stats = ex.extra_stats().get("spec")
+    if spec_stats:
+        metrics.update(
+            acceptance_rate=spec_stats["acceptance_rate"],
+            proposed_tokens=spec_stats["proposed_tokens"],
+            accepted_tokens=spec_stats["accepted_tokens"],
+            verify_steps=spec_stats["verify_steps"],
+            plain_steps=spec_stats["plain_steps"],
+            tokens_per_verify=spec_stats["tokens_per_verify"],
+            k_current=spec_stats["k_current"])
+    return results, metrics
+
+
+def run(smoke: bool = False, n_requests: int = 16, seed: int = 0,
+        k_max: int = 4) -> dict:
+    if smoke:
+        n_requests = min(n_requests, 10)
+    params, cfg, dparams, dcfg = _models(smoke)
+    trace = _trace(n_requests, seed + 1)
+    scfg = _server_config()
+    out_plain, plain = _serve(LLMExecutor(params, cfg, scfg), trace)
+    out_spec, spec = _serve(
+        SpecExecutor(params, cfg, scfg, dparams, dcfg,
+                     spec=SpecConfig(k_max=k_max)), trace)
+    tps = spec["tokens_per_step"] or 0.0
+    return {
+        "config": {"smoke": smoke, "n_requests": n_requests, "seed": seed,
+                   "n_layers": cfg.n_layers, "draft_layers": dcfg.n_layers,
+                   "k_max": k_max,
+                   "prefix_families": PREFIX_FAMILIES,
+                   "prompt_tokens": PREFIX_TOKENS + SUFFIX_TOKENS},
+        "plain": plain,
+        "spec": spec,
+        "step_speedup": plain["engine_steps"] / spec["engine_steps"],
+        "checks": {
+            "greedy_exact": out_plain == out_spec,
+            "tokens_per_step_above_one": tps > 1.0,
+            "fewer_engine_steps":
+                spec["engine_steps"] <= plain["engine_steps"],
+            "some_acceptance": (spec.get("accepted_tokens") or 0) > 0,
+        },
+    }
+
+
+def report(res: dict) -> str:
+    c = res["config"]
+    lines = [
+        "# Speculative decoding — shared-prefix trace, spec vs plain",
+        f"{c['n_requests']} requests, target {c['n_layers']}L / draft "
+        f"{c['draft_layers']}L, k_max={c['k_max']}",
+        "",
+        "| mode | steps | gen tok | tok/seq-step | acceptance | tok/s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for mode in ("plain", "spec"):
+        r = res[mode]
+        acc = r.get("acceptance_rate")
+        lines.append(
+            f"| {mode} | {r['engine_steps']} | {r['generated_tokens']} | "
+            f"{r['tokens_per_step']:.2f} | "
+            f"{'-' if acc is None else f'{acc:.2f}'} | "
+            f"{r['decode_tokens_per_s']:.1f} |")
+    lines.append(f"step speedup: {res['step_speedup']:.2f}x")
+    lines.append(f"checks: {res['checks']}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--k-max", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (CI mode)")
+    args = ap.parse_args(argv)
+    res = run(smoke=args.smoke, n_requests=args.requests, seed=args.seed,
+              k_max=args.k_max)
+    print(report(res))
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

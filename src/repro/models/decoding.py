@@ -438,3 +438,30 @@ def ssm_prefill(p, tokens, caches, cfg: ArchConfig, start_pos=0):
     caches, logits = jax.lax.scan(
         step, caches, (jnp.arange(s), jnp.moveaxis(tokens, 1, 0)))
     return jnp.moveaxis(logits, 0, 1), caches
+
+
+def ssm_prefill_states(p, tokens, caches, cfg: ArchConfig, start_pos=0):
+    """:func:`ssm_prefill` that also returns every intermediate state.
+
+    Speculative verification needs to roll a recurrent cache back to the
+    state *after j accepted tokens* — for attention that is free (KV rows
+    are positional), for an SSM the per-step states must be kept.  Same
+    scan as :func:`ssm_prefill`, but each step's post-update cache pytree
+    is stacked into the scan output.
+
+    Returns ``(logits (B, S, V), states)`` where every leaf of ``states``
+    has a leading step axis of length S: ``states[...][i]`` is the cache
+    after consuming ``tokens[:, i]``.  Bit-identical to sequential
+    ``decode_step`` by construction.
+    """
+    def step(carry, inp):
+        caches = carry
+        i, tok = inp
+        logits, caches = decode_step(p, tok[:, None], caches,
+                                     start_pos + i, cfg)
+        return caches, (logits[:, 0], caches)
+
+    s = tokens.shape[1]
+    _, (logits, states) = jax.lax.scan(
+        step, caches, (jnp.arange(s), jnp.moveaxis(tokens, 1, 0)))
+    return jnp.moveaxis(logits, 0, 1), states

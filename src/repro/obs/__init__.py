@@ -26,11 +26,12 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               DEFAULT_BUCKETS)
+                               COUNT_BUCKETS, DEFAULT_BUCKETS)
 from repro.obs.trace import TraceRecorder, validate_trace
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
+    "COUNT_BUCKETS",
     "TraceRecorder", "validate_trace", "Observability", "NULL",
 ]
 

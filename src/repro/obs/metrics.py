@@ -36,6 +36,11 @@ from typing import Callable, Optional
 DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
                    0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 
+#: Buckets for small-integer counts (accepted speculative tokens, batch
+#: fill, retry counts): exact through 8, coarse to 64.
+COUNT_BUCKETS = (0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0,
+                 12.0, 16.0, 24.0, 32.0, 48.0, 64.0)
+
 
 def _label_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

@@ -24,6 +24,7 @@ from repro.serving.executors import (DEFAULT_BUCKETS,  # noqa: F401
 from repro.serving.llm import (ExistingPrefix, LLMExecutor,  # noqa: F401
                                PrefillResult, ServerConfig)
 from repro.serving.registry import ModelRegistry  # noqa: F401
+from repro.serving.spec import SpecConfig, SpecExecutor  # noqa: F401
 from repro.serving.request import (Request, RequestCancelled,  # noqa: F401
                                    RequestHandle, RequestStatus)
 from repro.serving.scheduler import (SCHEDULERS, DeadlineScheduler,  # noqa: F401
@@ -38,6 +39,7 @@ __all__ = [
     "SCHEDULERS", "get_scheduler",
     "Executor", "ProgramExecutor", "ExecutionReport", "DEFAULT_BUCKETS",
     "LLMExecutor", "ServerConfig", "ExistingPrefix", "PrefillResult",
+    "SpecExecutor", "SpecConfig",
     "BlockPool", "OutOfBlocks", "PrefixCache", "PagedSequenceManager",
     "KVPagedStore", "StatePagedStore",
 ]

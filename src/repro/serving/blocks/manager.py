@@ -63,6 +63,11 @@ class PagedSequenceManager:
         is always recomputed (its logits seed decode).  ``probe=False``
         skips the cache entirely (prefix caching disabled).
         """
+        if rid in self._seqs:
+            # overwriting would orphan the old record's refcounts: its
+            # blocks stay active forever, and a later free() of a reused
+            # id double-releases whichever record survived
+            raise ValueError(f"sequence {rid} already exists")
         toks = np.asarray(tokens, np.int64)
         bs = self.block_size
         k_max = (len(toks) - 1) // bs
@@ -107,6 +112,8 @@ class PagedSequenceManager:
         """Copy-on-write fork: the child shares every parent block; the
         first write either side makes into a shared block triggers COW
         via :meth:`ensure_writable`."""
+        if child_rid in self._seqs:
+            raise ValueError(f"sequence {child_rid} already exists")
         parent = self._seqs[parent_rid]
         for bid in parent.table:
             self.pool.retain(bid)
@@ -116,6 +123,23 @@ class PagedSequenceManager:
                           hashes=list(parent.hashes))
         self._seqs[child_rid] = child
         return child
+
+    def adopt(self, tmp_rid: int, rid: int) -> SeqBlocks:
+        """Rename a sequence (fork-commit protocol).
+
+        The speculative write path forks a shadow of the live sequence,
+        COWs and writes the shadow, then — only on success — frees the
+        original and adopts the shadow under the original's id.  On any
+        failure the shadow is freed instead and the original is intact:
+        rollback is pure refcount release, never payload restore.  The
+        target id must be free (the original already released).
+        """
+        if rid in self._seqs:
+            raise ValueError(f"cannot adopt onto live sequence {rid}")
+        seq = self._seqs.pop(tmp_rid)
+        seq.rid = rid
+        self._seqs[rid] = seq
+        return seq
 
     def free(self, rid: int) -> None:
         seq = self._seqs.pop(rid)

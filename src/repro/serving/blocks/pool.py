@@ -114,11 +114,22 @@ class BlockPool:
 
     def retain(self, bid: int) -> int:
         """Take one more reference (prefix hit, fork).  Reactivates a
-        parked cached block."""
+        parked cached block.
+
+        A block that is neither referenced nor parked is *free* (or was
+        evicted and recycled): retaining it would resurrect a block the
+        allocator may already have handed to someone else, silently
+        corrupting the free list — callers holding such a stale id must
+        fail loudly instead.
+        """
         if bid == NULL_BLOCK:
             raise ValueError("cannot retain the null block")
         if bid in self._cached:
             del self._cached[bid]
+        elif bid not in self._ref:
+            raise ValueError(
+                f"retain of free/evicted block {bid}: the id is stale "
+                "(its block was evicted from the cached set or freed)")
         self._ref[bid] = self._ref.get(bid, 0) + 1
         return bid
 

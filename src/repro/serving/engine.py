@@ -92,6 +92,11 @@ class CutieEngine:
         self.n_done = 0
         self.batches: deque[dict] = deque(maxlen=history)
         self._queue_depth: deque[int] = deque(maxlen=history)
+        # token-at-a-time executors (LLM decode loops) report per-step
+        # emission counts; {model/tag: [tokens, steps]} turns those into
+        # the tokens_per_step stat (> 1.0 under speculative decoding)
+        self._tok_by_model: dict[str, list] = {}
+        self._tok_by_tag: dict[str, list] = {}
         self._done: deque[Request] = deque(maxlen=history)
         self._energy_uj = 0.0
         self._energy_seen = False    # distinguishes a measured 0.0 from
@@ -148,14 +153,18 @@ class CutieEngine:
 
     def submit(self, value, model: Optional[str] = None, *,
                priority: int = 0, deadline: Optional[float] = None,
-               tag: Optional[str] = None) -> RequestHandle:
+               tag: Optional[str] = None,
+               spec_k: Optional[int] = None) -> RequestHandle:
         """Validate + enqueue one request; returns its handle.
 
         ``model`` may be omitted when exactly one model is registered.
         ``deadline`` is an SLA in seconds from now (used by the deadline
         scheduler and the deadline-met stats); ``priority`` is higher-
         first (priority scheduler); ``tag`` labels the request for
-        per-class latency stats.
+        per-class latency stats.  ``spec_k`` caps this request's
+        speculative-decode proposal budget on spec-capable executors
+        (0 disables speculation for the request; None leaves the
+        executor's adaptive policy in charge).
         """
         if model is None:
             names = self.registry.names()
@@ -173,7 +182,7 @@ class CutieEngine:
         self._seq += 1
         req = Request(uid=self._uid, model=model, value=value,
                       priority=priority, deadline=deadline, tag=tag,
-                      seq=self._seq, submit_t=self.clock())
+                      spec_k=spec_k, seq=self._seq, submit_t=self.clock())
         self.scheduler.add(req)
         handle = RequestHandle(self, req)
         self._requests[req.uid] = req
@@ -263,6 +272,26 @@ class CutieEngine:
                     "batches", buckets=(0.125, 0.25, 0.375, 0.5, 0.625,
                                         0.75, 0.875, 1.0)).observe(
                     report.live / report.padded, model=name)
+            if report.tokens_generated is not None:
+                # tokens per *sequence*-step, so plain one-token decode
+                # reads 1.0 regardless of batch width and speculative
+                # decoding's multi-token commits push it above 1.0
+                emitted = sum(report.tokens_generated.values())
+                acc = self._tok_by_model.setdefault(name, [0, 0])
+                acc[0] += emitted
+                acc[1] += len(report.tokens_generated)
+                for uid, n in report.tokens_generated.items():
+                    r = self._requests.get(uid)
+                    if r is None or r.tag is None:
+                        continue
+                    tacc = self._tok_by_tag.setdefault(r.tag, [0, 0])
+                    tacc[0] += n
+                    tacc[1] += 1
+                if emitted:
+                    metrics.counter(
+                        "tokens_generated_total",
+                        "output tokens emitted by LLM executors").inc(
+                        emitted, model=name)
             if report.energy_uj is not None:
                 self._energy_uj += report.energy_uj * report.live
                 self._energy_seen = True
@@ -366,15 +395,19 @@ class CutieEngine:
         met = [r.deadline_met for r in self._done
                if r.deadline_met is not None]
         by_tag: dict = {}
-        for tag in sorted({r.tag for r in self._done if r.tag is not None}):
+        tags = ({r.tag for r in self._done if r.tag is not None}
+                | set(self._tok_by_tag))
+        for tag in sorted(tags):
             rs = [r for r in self._done if r.tag == tag]
             tmet = [r.deadline_met for r in rs
                     if r.deadline_met is not None]
+            toks, steps = self._tok_by_tag.get(tag, (0, 0))
             by_tag[tag] = {
                 "n": len(rs),
                 **percentiles([r.latency for r in rs]),
                 "deadline_met_frac": (sum(tmet) / len(tmet)
                                       if tmet else None),
+                "tokens_per_step": toks / steps if steps else None,
             }
         occ = [b["live"] / b["padded"] for b in self.batches]
         jit_variants = {
@@ -428,6 +461,12 @@ class CutieEngine:
             "sharding": sharding or None,
             "deadline_met_frac": (sum(met) / len(met)) if met else None,
             "by_tag": by_tag,
+            # decode steps that emit > 1 token (speculative decoding)
+            # push this above 1.0; one-shot executors never report it
+            "tokens_per_step": {
+                name: toks / steps
+                for name, (toks, steps) in self._tok_by_model.items()
+                if steps} or None,
             # _energy_seen (not truthiness) so a measured 0.0 uJ — e.g. an
             # all-zero activation trace — reports as 0.0, not "untraced"
             "energy_uj": self._energy_uj if self._energy_seen else None,

@@ -40,6 +40,10 @@ class ExecutionReport:
     rows: Any = None                 # tracer rows for this batch, if any
     energy_uj: Optional[float] = None  # per-inference switching energy
     per_device_live: Optional[list] = None  # live slots per data-parallel dev
+    tokens_generated: Optional[dict] = None  # {uid: tokens emitted this
+    #                                          step} for token-at-a-time
+    #                                          executors (LLM decode loops);
+    #                                          None for one-shot executors
 
 
 class Executor:

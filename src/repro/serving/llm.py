@@ -109,6 +109,7 @@ class LLMExecutor(Executor):
         self.pos = jnp.zeros((scfg.n_slots,), jnp.int32)
         self.cur_tok = jnp.zeros((scfg.n_slots, 1), jnp.int32)
         self._tokens: dict[int, list[int]] = {}        # uid -> output tokens
+        self._prompts: dict[int, np.ndarray] = {}      # uid -> prompt tokens
         self._key = jax.random.PRNGKey(scfg.seed)
         self._prefill_fns: dict = {}                   # jit variant cache
         self.prefill_tokens = 0          # prompt tokens admitted
@@ -206,31 +207,56 @@ class LLMExecutor(Executor):
         return any(r is not None for r in self.slots)
 
     def execute(self, requests) -> ExecutionReport:
-        """Prefill newly admitted requests, decode one token for all
-        active slots, release finished ones."""
+        """Prefill newly admitted requests, advance all active slots one
+        step (one token each here; possibly several under speculative
+        decoding), release finished ones."""
         for req in requests:
             self._admit(req)
         live = sum(r is not None for r in self.slots)
         completions: list = []
         if live == 0:
-            return ExecutionReport(completions, 0, self.scfg.n_slots)
+            return ExecutionReport(completions, 0, self.scfg.n_slots,
+                                   tokens_generated={})
         with self.obs.trace.span("decode", tid=0, cat="llm", live=live):
-            nxt = self.decode()
+            step_tokens = self._step_tokens()
         self.obs.trace.counter("blocks", {
             "active": self.pool.n_active, "cached": self.pool.n_cached,
             "free": self.pool.n_free})
+        tokens_generated: dict[int, int] = {}
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(nxt[i])
             toks = self._tokens[req.uid]
-            toks.append(tok)
-            if tok == self.scfg.eos_id or \
-                    len(toks) >= self.scfg.max_new_tokens or \
-                    int(self.pos[i]) >= self.scfg.max_len - 1:
+            plen = len(self._prompts[req.uid])
+            finished = False
+            emitted = 0
+            for tok in step_tokens.get(i, ()):
+                toks.append(tok)
+                emitted += 1
+                # same stopping rule as one-token decode: `plen +
+                # len(toks) - 1` is the position counter a plain decode
+                # loop would hold after emitting this token, so a
+                # multi-token step truncates exactly where the
+                # sequential loop would have stopped
+                if tok == self.scfg.eos_id or \
+                        len(toks) >= self.scfg.max_new_tokens or \
+                        plen + len(toks) - 1 >= self.scfg.max_len - 1:
+                    finished = True
+                    break
+            tokens_generated[req.uid] = emitted
+            if finished:
                 completions.append((req.uid, self._tokens.pop(req.uid)))
                 self._release(i)
-        return ExecutionReport(completions, live, self.scfg.n_slots)
+        return ExecutionReport(completions, live, self.scfg.n_slots,
+                               tokens_generated=tokens_generated)
+
+    def _step_tokens(self) -> dict[int, list[int]]:
+        """One engine step's new tokens per live slot.  The base decode
+        loop emits exactly one; `SpecExecutor` overrides this with the
+        propose/verify/accept cycle (1 .. k+1 tokens per slot)."""
+        nxt = self.decode()
+        return {i: [int(nxt[i])]
+                for i, r in enumerate(self.slots) if r is not None}
 
     def extra_stats(self) -> dict:
         """Paged-state accounting for ``engine.stats()``."""
@@ -259,6 +285,7 @@ class LLMExecutor(Executor):
         the :class:`ExistingPrefix` served from the cache."""
         slot = self.slots.index(None)
         plen = len(tokens)
+        self._prompts[uid] = np.asarray(tokens, np.int64)
         self.prefill_tokens += plen
         self.obs.trace.begin("prefill", tid=uid, cat="request",
                              prompt_len=plen)
@@ -474,6 +501,7 @@ class LLMExecutor(Executor):
         self.manager.fork(uid, new_uid)
         self.slots[dst] = _Resident(new_uid)
         self._tokens[new_uid] = list(self._tokens[uid])
+        self._prompts[new_uid] = self._prompts[uid]
         self.pos = self.pos.at[dst].set(self.pos[src])
         self.cur_tok = self.cur_tok.at[dst].set(self.cur_tok[src])
         return dst
@@ -488,6 +516,7 @@ class LLMExecutor(Executor):
         self.slots[slot] = None
         self.pos = self.pos.at[slot].set(0)      # empty slots write to NULL
         self.cur_tok = self.cur_tok.at[slot, 0].set(0)
+        self._prompts.pop(req.uid, None)
         if self.scfg.paged and not self.is_ssm and \
                 self.manager.has(req.uid):
             self.manager.free(req.uid)

@@ -44,6 +44,8 @@ class Request:
     priority: int = 0                # higher serves first (priority policy)
     deadline: Optional[float] = None  # SLA seconds from submit (EDF policy)
     tag: Optional[str] = None        # free-form class label for stats
+    spec_k: Optional[int] = None     # speculative-decode proposal budget
+    #                                  (0 disables; None = executor default)
     seq: int = 0                     # global submission-order tiebreaker
     submit_t: float = 0.0
     schedule_t: Optional[float] = None

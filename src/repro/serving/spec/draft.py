@@ -1,0 +1,228 @@
+"""`DraftWorker` — the small ternary draft model's decode loop.
+
+One draft sequence per target slot, living in the **same**
+:class:`~repro.serving.blocks.pool.BlockPool` as the target's paged
+state (the draft's KV pages / state snapshots are its own stores, but
+every physical block comes out of the shared budget, so draft residency
+is priced by the same allocator the scheduler already watches).
+
+The worker is deliberately lag-tolerant: it tracks how many tokens of
+the true sequence it has consumed (``_pos``) and each ``propose()``
+call first *catches up* on tokens it has not seen (the correction token
+of the previous verify step — or the whole prompt right after
+admission), then rolls ``k - 1`` further steps on its own proposals.
+Catch-up and proposal are one jitted `lax.scan` over the draft's decode
+step, bucketed to a power of two so jit variants stay bounded.
+
+Rejected proposals need no block surgery on the draft side: a draft
+sequence is private (never forked, never hash-committed), so its KV rows
+for rejected positions are simply overwritten by the next catch-up, and
+an SSM draft rolls back by re-writing its slot state from the per-step
+states the propose scan collected.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoding as DEC
+from repro.models.config import ArchConfig
+from repro.serving.blocks import (KVPagedStore, PagedSequenceManager,
+                                  PrefixCache, StatePagedStore)
+
+_PROPOSE_FLOOR = 8     # pow2 bucket floor for the propose-scan length
+
+
+def _bucket(n: int, floor: int) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class DraftWorker:
+    """Per-slot draft sequences over the shared block pool."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg, pool):
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.is_ssm = cfg.family == "ssm"
+        self.pool = pool
+        self.n_slots = scfg.n_slots
+        self._pos = [0] * scfg.n_slots        # tokens consumed per slot
+        self._fns: dict = {}                  # propose-scan jit variants
+        self._key = jax.random.PRNGKey(scfg.seed + 7919)
+        bs = scfg.block_size
+        self.blocks_per_seq = scfg.max_len // bs
+        if self.is_ssm:
+            one = DEC.init_caches(cfg, 1, scfg.max_len)
+            template = jax.tree.map(lambda a: a[:, 0], one["ssm"])
+            self._init_state = template
+            self.store = StatePagedStore(
+                pool.num_blocks, template, codec_name=scfg.state_codec)
+            self._slot_bids = [pool.allocate()
+                               for _ in range(scfg.n_slots)]
+            # last propose's stacked per-step states + scan start pos,
+            # per slot: commit() picks the state matching the accepted
+            # run, which is the whole rollback story for an SSM draft
+            self._pending: list = [None] * scfg.n_slots
+        else:
+            self.manager = PagedSequenceManager(pool, PrefixCache(), bs)
+            self.store = KVPagedStore(
+                cfg.n_layers, pool.num_blocks, bs, cfg.n_kv, cfg.d_head,
+                dtype=cfg.kv_dtype, codec_name=scfg.kv_codec)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def blocks_per_admit(self) -> int:
+        """Shared-pool blocks one admitted draft sequence pins."""
+        return 0 if self.is_ssm else self.blocks_per_seq
+
+    def admit(self, slot: int, uid: int, prompt, k_max: int) -> None:
+        self._pos[slot] = 0
+        if self.is_ssm:
+            self._pending[slot] = None
+            self.store.write_(self._slot_bids[slot], self._init_state)
+            return
+        scfg = self.scfg
+        total = min(len(prompt) + scfg.max_new_tokens + k_max + 1,
+                    scfg.max_len)
+        self.manager.create(uid, prompt, total, probe=False)
+
+    def free(self, slot: int, uid: int) -> None:
+        self._pos[slot] = 0
+        if self.is_ssm:
+            self._pending[slot] = None
+        elif self.manager.has(uid):
+            self.manager.free(uid)
+
+    # -- propose ------------------------------------------------------------
+
+    def propose(self, slot: int, uid: int, tokens: np.ndarray, k: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """Draft ``k`` tokens continuing ``tokens`` (committed + pending).
+
+        Returns ``(proposals (k,), draft_logits (k, V))`` — the logits
+        rows are the distributions each proposal was drawn from, aligned
+        for rejection sampling.
+        """
+        t = len(tokens)
+        s0 = self._pos[slot]
+        n_new = t - s0
+        if n_new < 1:
+            raise RuntimeError(
+                f"draft slot {slot} is ahead of the sequence "
+                f"({s0} consumed, {t} known)")
+        n_total = n_new + k - 1
+        lb = _bucket(n_total, _PROPOSE_FLOOR)
+        toks = np.zeros((lb,), np.int32)
+        toks[:n_new] = np.asarray(tokens[s0:], np.int32)
+        if self.scfg.temperature > 0:
+            keys = jax.random.split(self._key, lb + 1)
+            self._key, keys = keys[0], keys[1:]
+        else:
+            keys = jnp.zeros((lb, 2), jnp.uint32)
+        if self.is_ssm:
+            state = self.store.read_([self._slot_bids[slot]])
+            nexts, lgs, states = self._ssm_fn(lb)(
+                self.params, jnp.asarray(toks), jnp.int32(n_new),
+                state, jnp.int32(s0), keys)
+            self._pending[slot] = (states, s0)
+        else:
+            table = jnp.asarray(
+                self.manager.table_array(uid, self.blocks_per_seq))
+            nexts, lgs, self.store.pages = self._kv_fn(lb)(
+                self.params, jnp.asarray(toks), jnp.int32(n_new),
+                jnp.int32(n_total), self.store.pages, table,
+                jnp.int32(s0), keys)
+        nexts = np.asarray(nexts)
+        lgs = np.asarray(lgs)
+        sel = slice(n_new - 1, n_new - 1 + k)
+        return nexts[sel], lgs[sel]
+
+    def commit(self, slot: int, n_valid: int) -> None:
+        """The verify step accepted a run: the true sequence's first
+        ``n_valid`` tokens match what this draft consumed/proposed, so
+        advance to there (KV rows beyond are overwritten by the next
+        catch-up; an SSM slot state is re-written from the scan's
+        per-step states)."""
+        if self.is_ssm and self._pending[slot] is not None:
+            states, s0 = self._pending[slot]
+            idx = n_valid - 1 - s0
+            state = jax.tree.map(lambda a: a[idx][:, 0], states)
+            self.store.write_(self._slot_bids[slot], state)
+            self._pending[slot] = None
+        self._pos[slot] = n_valid
+
+    # -- jitted propose scans ------------------------------------------------
+
+    def _kv_fn(self, lb: int):
+        key = ("kv", lb)
+        if key not in self._fns:
+            cfg, store, temp = self.cfg, self.store, self.scfg.temperature
+
+            def fn(p, toks, n_new, n_total, pages, table, pos0, keys):
+                def step(carry, inp):
+                    pages, cur = carry
+                    i, key = inp
+                    tok = jnp.where(i < n_new, toks[i], cur)
+                    pos = (pos0 + i)[None]
+                    kv = store.gather(pages, table[None])
+                    logits, new = DEC.decode_step(
+                        p, tok[None, None], {"kv": kv}, pos, cfg)
+                    rows = {n: new["kv"][n][:, jnp.arange(1), pos]
+                            for n in ("k", "v")}
+                    # bucket-padding steps write to the null block
+                    t_eff = jnp.where(i < n_total, table,
+                                      jnp.zeros_like(table))
+                    pages = store.write_rows(pages, t_eff[None], pos, rows)
+                    lg = logits[0, -1, :cfg.vocab]
+                    if temp > 0:
+                        nxt = jax.random.categorical(key, lg / temp)
+                    else:
+                        nxt = jnp.argmax(lg)
+                    nxt = nxt.astype(jnp.int32)
+                    return (pages, nxt), (nxt, lg)
+
+                (pages, _), (nexts, lgs) = jax.lax.scan(
+                    step, (pages, toks[0]), (jnp.arange(lb), keys))
+                return nexts, lgs, pages
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _ssm_fn(self, lb: int):
+        key = ("ssm", lb)
+        if key not in self._fns:
+            cfg, temp = self.cfg, self.scfg.temperature
+
+            def fn(p, toks, n_new, state, pos0, keys):
+                def step(carry, inp):
+                    st, cur = carry
+                    i, key = inp
+                    tok = jnp.where(i < n_new, toks[i], cur)
+                    logits, new = DEC.decode_step(
+                        p, tok[None, None], {"ssm": st}, pos0 + i, cfg)
+                    st = new["ssm"]
+                    lg = logits[0, -1, :cfg.vocab]
+                    if temp > 0:
+                        nxt = jax.random.categorical(key, lg / temp)
+                    else:
+                        nxt = jnp.argmax(lg)
+                    nxt = nxt.astype(jnp.int32)
+                    return (st, nxt), (nxt, lg, st)
+
+                batched = jax.tree.map(lambda a: a[0][:, None], state)
+                _, (nexts, lgs, states) = jax.lax.scan(
+                    step, (batched, toks[0]), (jnp.arange(lb), keys))
+                return nexts, lgs, states
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    @property
+    def n_jit_variants(self) -> int:
+        return len(self._fns)

@@ -92,6 +92,23 @@ def test_pool_copy_on_write():
     assert nb != b and pairb == (b, nb)
 
 
+def test_pool_stale_retain_raises():
+    """Regression: retaining a freed (or evicted-and-recycled) block id
+    silently corrupted the free list — a stale id resurrected into two
+    owners.  It must raise instead."""
+    pool = BlockPool(4)
+    a = pool.allocate()
+    pool.release(a)                          # anonymous -> free list
+    with pytest.raises(ValueError, match="stale"):
+        pool.retain(a)
+    # a parked block is NOT stale: prefix hits retain it legitimately
+    b = pool.allocate()
+    pool.set_hash(b, "hb")
+    pool.release(b)                          # parks (LRU)
+    pool.retain(b)
+    assert pool.refcount(b) == 1
+
+
 # ---------------------------------------------------------------------------
 # PrefixCache: chain hashing + matching
 # ---------------------------------------------------------------------------
@@ -207,6 +224,75 @@ def test_manager_probe_false_skips_cache():
     s = m.create(2, toks, 12, probe=False)
     assert s.n_cached == 0
     assert m.cache.lookup_tokens == 10       # only seq 1's probe counted
+
+
+def test_manager_rid_collision_raises():
+    """Regression: create()/fork() onto a live rid silently overwrote
+    its record, orphaning the old table's refcounts forever (and a
+    later free() double-released whichever record survived)."""
+    m = _mgr()
+    toks = np.arange(10)
+    m.create(1, toks, 12)
+    with pytest.raises(ValueError, match="already exists"):
+        m.create(1, toks, 12)
+    with pytest.raises(ValueError, match="already exists"):
+        m.fork(1, 1)
+    m.create(2, toks, 12)
+    with pytest.raises(ValueError, match="live sequence"):
+        m.adopt(2, 1)
+    assert m.pool.n_active == 6              # nothing leaked by the raises
+    m.free(1)
+    m.free(2)
+    assert m.pool.n_active == 0
+
+
+def test_fork_commit_adopt_under_eviction_pressure():
+    """The speculative write path's fork-commit protocol interleaved
+    with eviction: fork a shadow of a committed sequence, COW its write
+    span while the pool is tight enough that parked prefix blocks get
+    recycled mid-flight, then free-the-original + adopt.  No block may
+    be double-released or resurrected, and rollback (freeing the shadow
+    instead) must leave the original untouched."""
+    m = _mgr(num_blocks=8, bs=4)             # capacity 7
+    toks = np.arange(10)
+    m.create(1, toks, 12)                    # 3 blocks
+    m.commit(1)                              # 2 hash-registered
+    # park an unrelated committed prefix so eviction has a victim
+    m.create(9, np.arange(8) + 70, 8)
+    m.commit(9)
+    m.free(9)                                # 2 parked, 2 free
+    assert m.pool.n_cached == 2
+
+    # shadow fork + span COW: needs 3 fresh blocks (every forked block
+    # is shared) -> the free list runs dry and a parked block is
+    # evicted and recycled as a COW destination mid-protocol
+    m.fork(1, -1)
+    pairs = m.ensure_span_writable(-1, 0, 10)
+    assert len(pairs) == 3 and m.pool.evictions >= 1
+    for src, dst in pairs:
+        assert src != dst
+    # commit: free the original, adopt the shadow under its id
+    m.free(1)
+    m.adopt(-1, 1)
+    assert m.has(1) and not m.has(-1)
+    # every table entry is exclusively owned and alive
+    for bid in m.get(1).table:
+        assert m.pool.refcount(bid) == 1
+    m.free(1)
+    assert m.pool.n_active == 0
+
+    # rollback leg: fork a shadow, COW, then free the *shadow* — the
+    # original must still decode (all blocks alive, refcount 1)
+    m2 = _mgr(num_blocks=9, bs=4)
+    m2.create(1, toks, 12)
+    m2.commit(1)
+    m2.fork(1, -1)
+    m2.ensure_span_writable(-1, 0, 10)
+    m2.free(-1)
+    for bid in m2.get(1).table:
+        assert m2.pool.refcount(bid) == 1
+    m2.free(1)
+    assert m2.pool.n_active == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,240 @@
+"""Speculative decoding: rejection sampling, adaptive k, and the
+`SpecExecutor` end-to-end.
+
+The load-bearing property is **greedy bit-identity**: under
+temperature 0, a speculatively decoded sequence must be token-for-token
+the plain `LLMExecutor` output — regardless of draft quality (a random
+draft forces first-position rejection every step; a layer-truncated
+draft accepts partially with mid-sequence rejections; the target as its
+own draft exhausts k every step).  Covered for both paged families
+(dense / mamba2), plus the per-request ``spec_k`` switch, the
+acceptance-driven k adaptation, and the ``tokens_per_step`` stats
+plumbing through ``engine.stats()``.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import transformer as TF
+from repro.models.config import reduce_for_smoke
+from repro.serving import (CutieEngine, LLMExecutor, ServerConfig,
+                           SpecConfig, SpecExecutor)
+from repro.serving.spec import AdaptiveK, greedy_accept, sample_accept
+
+# ---------------------------------------------------------------------------
+# Rejection sampling (pure numpy)
+# ---------------------------------------------------------------------------
+
+
+def _rows(winners, vocab=8):
+    """Logit rows whose argmax is `winners[i]`."""
+    out = np.full((len(winners), vocab), -4.0)
+    for i, w in enumerate(winners):
+        out[i, w] = 4.0
+    return out
+
+
+def test_greedy_accept_prefix_match():
+    # target greedy path: 3, 5, 2, bonus 7
+    target = _rows([3, 5, 2, 7])
+    # full acceptance: all k proposals match -> k+1 tokens incl. bonus
+    emitted, j = greedy_accept(np.array([3, 5, 2]), target)
+    assert (emitted, j) == ([3, 5, 2, 7], 3)
+    # mid-sequence rejection: fallback is the target's token THERE
+    emitted, j = greedy_accept(np.array([3, 1, 2]), target)
+    assert (emitted, j) == ([3, 5], 1)
+    # first-position rejection still emits one (target) token
+    emitted, j = greedy_accept(np.array([0, 5, 2]), target)
+    assert (emitted, j) == ([3], 0)
+
+
+def test_sample_accept_agreement_and_residual():
+    rng = np.random.default_rng(0)
+    target = _rows([3, 5, 2, 7])
+    # draft == target -> acceptance probability 1 for matching proposals
+    emitted, j = sample_accept(np.array([3, 5, 2]), target[:3], target,
+                               temperature=1.0, rng=rng)
+    assert j == 3 and emitted[:3] == [3, 5, 2]
+    # draft certain about a token the target rules out -> rejected and
+    # the fallback comes from the residual (target minus draft mass)
+    draft = _rows([6, 5, 2])
+    hits = 0
+    for _ in range(50):
+        emitted, j = sample_accept(np.array([6, 5, 2]), draft, target,
+                                   temperature=1.0, rng=rng)
+        if j == 0:
+            hits += 1
+            assert emitted[0] != 6       # q already covered token 6
+    assert hits > 40                     # p(6)/q(6) << 1 almost never accepts
+
+
+def test_adaptive_k_tracks_acceptance():
+    spec = SpecConfig(k_max=6, k_min=1, window=16, min_samples=4)
+    ak = AdaptiveK(spec)
+    assert ak.k() == 6                   # optimistic before min_samples
+    for _ in range(8):
+        ak.observe(6, 0)                 # nothing ever accepted
+    assert ak.k() == 1                   # floor, not 0 (spec stays on)
+    ak = AdaptiveK(spec)
+    for _ in range(8):
+        ak.observe(6, 6)                 # everything accepted
+    assert ak.k() == 6
+    ak = AdaptiveK(spec)
+    for _ in range(8):
+        ak.observe(4, 2)                 # a = 0.5 -> expected run 1
+    assert ak.k() == 1
+    st = ak.stats()
+    assert st["acceptance_rate"] == 0.5 and st["k_current"] == 1
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(k_max=0)
+    with pytest.raises(ValueError):
+        SpecConfig(k_max=2, k_min=3)
+
+
+# ---------------------------------------------------------------------------
+# SpecExecutor end-to-end: greedy bit-identity
+# ---------------------------------------------------------------------------
+
+_SHARED = list(np.arange(20) % 50)
+_PROMPTS = [np.array(_SHARED + [100 + i, i]) for i in range(4)]
+_KW = dict(n_slots=2, max_new_tokens=8, max_len=64, block_size=8)
+
+
+@functools.cache
+def _model(name, layers, seed=0):
+    cfg = reduce_for_smoke(configs.get(name)).replace(n_layers=layers)
+    return TF.init_params(cfg, jax.random.PRNGKey(seed)), cfg
+
+
+def _serve(ex, prompts=_PROMPTS, **submit_kw):
+    eng = CutieEngine("fcfs")
+    eng.register("llm", ex)
+    for pr in prompts:
+        eng.submit(pr, model="llm", **submit_kw)
+    return eng.run(), eng
+
+
+@functools.cache
+def _plain(name, layers):
+    params, cfg = _model(name, layers)
+    out, _ = _serve(LLMExecutor(params, cfg, ServerConfig(paged=True,
+                                                          **_KW)))
+    return out
+
+
+@pytest.mark.parametrize("name,layers", [
+    ("llama3_2_1b", 1), ("mamba2_780m", 1)])
+def test_spec_greedy_bit_identical_random_draft(name, layers):
+    """A randomly initialized draft agrees with the target on nothing:
+    every verify step rejects at the first proposal, and the output must
+    still be exactly the plain greedy trajectory."""
+    params, cfg = _model(name, layers)
+    dparams, dcfg = _model(name, layers, seed=1)
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                      dparams, dcfg)
+    out, eng = _serve(ex)
+    assert out == _plain(name, layers)
+    spec = ex.extra_stats()["spec"]
+    assert spec["verify_steps"] > 0
+    assert spec["accepted_tokens"] < spec["proposed_tokens"]
+    # sustained rejection drives the adaptive budget to the floor
+    assert spec["k_current"] == SpecConfig().k_min
+
+
+@pytest.mark.parametrize("name,layers", [
+    ("llama3_2_1b", 1), ("mamba2_780m", 1)])
+def test_spec_greedy_bit_identical_self_draft(name, layers):
+    """The target as its own draft accepts every proposal (k
+    exhaustion + bonus token each verify step) — the stress case for
+    multi-token commits, draft catch-up arithmetic and the stop rule."""
+    params, cfg = _model(name, layers)
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                      params, cfg)
+    out, eng = _serve(ex)
+    assert out == _plain(name, layers)
+    spec = ex.extra_stats()["spec"]
+    assert spec["acceptance_rate"] == 1.0
+    assert spec["tokens_per_verify"] > 2.0
+    # multi-token steps surface in the engine-level stat
+    assert eng.stats()["tokens_per_step"]["llm"] > 1.0
+
+
+def test_spec_greedy_bit_identical_partial_draft():
+    """A layer-truncated draft sharing the target's weights accepts
+    some proposals and rejects mid-run — the interesting regime where
+    committed KV spans mix draft-verified and replayed rows."""
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=2)
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    dcfg = cfg.replace(n_layers=1)
+    dparams = dict(params,
+                   layers=jax.tree.map(lambda a: a[:1], params["layers"]))
+    kw = dict(_KW, max_new_tokens=12)
+    out_plain, _ = _serve(LLMExecutor(params, cfg,
+                                      ServerConfig(paged=True, **kw)))
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **kw),
+                      dparams, dcfg)
+    out, _ = _serve(ex)
+    assert out == out_plain
+    spec = ex.extra_stats()["spec"]
+    assert 0 < spec["accepted_tokens"] < spec["proposed_tokens"]
+
+
+def test_spec_k_zero_disables_speculation_per_request():
+    params, cfg = _model("llama3_2_1b", 1)
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                      params, cfg)
+    out, eng = _serve(ex, spec_k=0)
+    assert out == _plain("llama3_2_1b", 1)
+    spec = ex.extra_stats()["spec"]
+    assert spec["verify_steps"] == 0 and spec["plain_steps"] > 0
+    # every step emitted exactly one token per live sequence
+    assert eng.stats()["tokens_per_step"]["llm"] <= 1.0
+
+
+def test_spec_k_caps_proposals():
+    params, cfg = _model("llama3_2_1b", 1)
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                      params, cfg, spec=SpecConfig(k_max=4))
+    out, _ = _serve(ex, spec_k=2)
+    assert out == _plain("llama3_2_1b", 1)
+    spec = ex.extra_stats()["spec"]
+    # k_eff = min(adaptive k<=4, request cap 2, budgets)
+    assert spec["verify_steps"] > 0
+    assert spec["proposed_tokens"] <= 2 * spec["verify_steps"]
+
+
+def test_spec_stats_ride_engine_stats_and_tags():
+    params, cfg = _model("llama3_2_1b", 1)
+    ex = SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                      params, cfg)
+    eng = CutieEngine("fcfs")
+    eng.register("llm", ex)
+    for i, pr in enumerate(_PROMPTS):
+        eng.submit(pr, model="llm", tag="interactive" if i % 2 else "batch")
+    eng.run()
+    st = eng.stats()
+    assert st["paged_state"]["llm"]["spec"]["acceptance_rate"] == 1.0
+    assert st["tokens_per_step"]["llm"] > 1.0
+    for tag in ("interactive", "batch"):
+        assert st["by_tag"][tag]["tokens_per_step"] > 1.0
+    # spec counters landed in the unified metrics registry
+    snap = eng.obs.metrics.snapshot()
+    assert snap["spec_proposed_tokens_total"]["series"][""] > 0
+    assert snap["spec_accepted_per_step"]["kind"] == "histogram"
+
+
+def test_spec_requires_paged_and_matching_vocab():
+    params, cfg = _model("llama3_2_1b", 1)
+    with pytest.raises(ValueError, match="paged"):
+        SpecExecutor(params, cfg, ServerConfig(paged=False, **_KW),
+                     params, cfg)
+    with pytest.raises(ValueError, match="vocab"):
+        SpecExecutor(params, cfg, ServerConfig(paged=True, **_KW),
+                     params, cfg.replace(vocab=cfg.vocab + 1))
