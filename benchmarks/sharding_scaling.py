@@ -1,19 +1,37 @@
-"""Multi-device scaling of CutiePrograms: throughput vs device count.
+"""Multi-device scaling of CutiePrograms: throughput, traffic, pipelining.
 
 CUTIE's unrolling argument (paper §III; Tridgell et al.) says throughput
 scales with the compute fabric you unroll onto.  This benchmark measures
-the software analogue on the CIFAR CutieProgram (paper Table III layout,
-width-reduced for CPU budgets): data-parallel batch sharding and
-filter-dimension (OCU/output-channel) sharding over a host-device mesh,
-via ``CutiePipeline(mesh=...)``.
+the software analogue over a host-device mesh via
+``CutiePipeline(mesh=...)``:
 
-Records, per device count: steady-state throughput (img/s), speedup over
-1 device, and — the hard gate — bit-exactness of every sharded output
-against the unsharded ``ref`` oracle (including a batch that does not
-divide the mesh, exercising the padding path).  Bit-exactness failures
-raise, so CI fails on correctness, never on absolute speed (shared
-runners).  The >4x-at-8-devices scaling check is only evaluated when the
-host actually has >= 8 cores; otherwise it is recorded as ``None``.
+* **data-parallel** batch sharding on the CIFAR CutieProgram (paper
+  Table III layout, width-reduced for CPU budgets), devices 1..8,
+* **filter-dimension** (OCU/output-channel) sharding, packed
+  5-trits/byte collectives vs dense int8 — both wall-clock and the
+  analytic per-device all-gather traffic (`collective_bytes`), whose
+  dense/packed ratio is ~5x by construction and host-invariant,
+* **pipeline-parallel** layer sharding on a uniform 8-layer trunk (the
+  CIFAR program has pools, which the SPMD ring cannot carry): one stage
+  per device, microbatches streamed through a ``ppermute`` ring,
+  including a batch that does not divide the microbatch count.
+
+Every sharded output is checked bit-exact against the unsharded ``ref``
+oracle; failures raise, so CI fails on correctness, never on absolute
+speed (shared runners).
+
+Gating under ``run.py --compare`` (see ``SPEED_CHECKS`` /
+``THROUGHPUT_METRICS`` below) with a documented **host-core guard**:
+
+* the packed-traffic ratios and bit-exactness are host-invariant and
+  gate unconditionally;
+* the wall-clock scaling check ``scaling_4x_8dev`` and the gated
+  ``speedup_vs_1dev.8`` metric need real host parallelism — the check
+  is recorded as ``None`` (with the reason under ``checks_guard``) on
+  hosts with fewer than 8 cores, and the metric diff is implicitly
+  guarded because ``config`` embeds ``host_cores``: ``run.py`` skips
+  metric deltas whenever the baseline config differs, so a 2-core CI
+  runner never diffs speedups against an 8-core baseline.
 
 The measurement runs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=<N>`` so it works no
@@ -34,6 +52,30 @@ import time
 N_DEVICES = 8
 _FLAG = "--xla_force_host_platform_device_count"
 
+#: Boolean ``res["checks"]`` entries enforced by ``run.py --compare``.
+#: ``scaling_4x_8dev`` is None (guarded, see ``checks_guard``) on hosts
+#: with < 8 cores; the traffic ratios are analytic and always evaluate.
+SPEED_CHECKS = ("scaling_4x_8dev", "packed_traffic_5x_filter",
+                "packed_traffic_5x_layer")
+
+#: Gated metrics (>20% regression fails --compare).  The traffic ratios
+#: are host-invariant; the speedup is host-dependent but guarded by the
+#: config check — ``config.host_cores`` differs across runner classes,
+#: and run.py skips the diff on any config mismatch.
+THROUGHPUT_METRICS = {
+    "traffic.filter.dense_over_packed": "higher",
+    "traffic.layer.dense_over_packed": "higher",
+    "speedup_vs_1dev.8": "higher",
+}
+
+#: Noise-prone absolute numbers: deltas printed, never gating.
+INFO_METRICS = {
+    "throughput_img_s.1": "higher",
+    "throughput_img_s.8": "higher",
+    "filter_throughput_img_s.packed_2": "higher",
+    "layer_throughput_img_s.4": "higher",
+}
+
 
 def _config(smoke: bool) -> dict:
     return {
@@ -43,6 +85,8 @@ def _config(smoke: bool) -> dict:
         "batch": 16 if smoke else 32,
         "reps": 2 if smoke else 3,
         "filter_degrees": [2] if smoke else [2, 4],
+        "layer_degrees": [2, 4] if smoke else [2, 4, 8],
+        "trunk_layers": 8,
         "smoke": smoke,
     }
 
@@ -50,6 +94,27 @@ def _config(smoke: bool) -> dict:
 # ---------------------------------------------------------------------------
 # Measurement (runs inside the subprocess — 8 host devices forced)
 # ---------------------------------------------------------------------------
+
+
+def _uniform_trunk(width: int, n_layers: int):
+    """A uniform stride-1/padded/pool-free trunk — the shape pipeline-
+    parallel stages require (the CIFAR program's pools break it)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    keys = jax.random.split(jax.random.PRNGKey(7), n_layers)
+    instrs = []
+    for k in keys:
+        k1, k2 = jax.random.split(k)
+        w = jax.random.normal(k1, (3, 3, width, width))
+        bn = {"gamma": jax.random.normal(k2, (width,)) + 0.5,
+              "beta": jnp.zeros((width,)), "mean": jnp.zeros((width,)),
+              "var": jnp.ones((width,))}
+        instrs.append(engine.compile_layer(w, bn))
+    return engine.CutieProgram(
+        instrs, engine.CutieInstance(n_i=width, n_o=width))
 
 
 def _measure(cfg: dict) -> dict:
@@ -85,16 +150,19 @@ def _measure(cfg: dict) -> dict:
         return best
 
     checks: dict = {}
-    throughput, speedup = {}, {}
+
+    def bit_check(name: str, y, oracle, what: str):
+        ok = bool((np.asarray(y) == oracle).all())
+        checks[name] = ok
+        if not ok:
+            raise AssertionError(f"{what} differs from the ref oracle")
+
+    # -- data-parallel batch sharding ---------------------------------------
+    throughput = {}
     for d in cfg["devices"]:
         pipe = CutiePipeline(prog, backend="ref", mesh=MeshSpec(data=d))
-        y = np.asarray(pipe.run(x))
-        bit = bool((y == y_ref).all())
-        checks[f"bit_exact_data{d}"] = bit
-        if not bit:
-            raise AssertionError(
-                f"data-parallel output (mesh data:{d}) differs from the "
-                f"ref oracle")
+        bit_check(f"bit_exact_data{d}", pipe.run(x), y_ref,
+                  f"data-parallel output (mesh data:{d})")
         throughput[str(d)] = batch / timed(pipe, x)
     base = throughput["1"]
     speedup = {d: t / base for d, t in throughput.items()}
@@ -102,36 +170,85 @@ def _measure(cfg: dict) -> dict:
     # padding path: batch that does not divide the mesh
     pipe = CutiePipeline(prog, backend="ref",
                          mesh=MeshSpec(data=cfg["devices"][-1]))
-    y = np.asarray(pipe.run(x_odd))
-    checks["bit_exact_padding"] = bool((y == y_ref_odd).all())
-    if not checks["bit_exact_padding"]:
-        raise AssertionError("padded-batch sharded output differs from "
-                             "the ref oracle")
+    bit_check("bit_exact_padding", pipe.run(x_odd), y_ref_odd,
+              "padded-batch sharded output")
 
-    # filter-dimension (output-channel / OCU) sharding
+    # -- filter sharding: packed vs dense collectives -----------------------
     filter_tp = {}
+    traffic: dict = {}
     for f in cfg["filter_degrees"]:
-        pipe = CutiePipeline(prog, backend="ref", mesh=MeshSpec(filter=f))
-        y = np.asarray(pipe.run(x))
-        bit = bool((y == y_ref).all())
-        checks[f"bit_exact_filter{f}"] = bit
-        if not bit:
-            raise AssertionError(
-                f"filter-sharded output (mesh filter:{f}) differs from "
-                f"the ref oracle")
-        filter_tp[str(f)] = batch / timed(pipe, x)
+        for packed in (True, False):
+            pipe = CutiePipeline(prog, backend="ref",
+                                 mesh=MeshSpec(filter=f),
+                                 packed_collectives=packed)
+            wire = "packed" if packed else "dense"
+            bit_check(f"bit_exact_filter{f}_{wire}", pipe.run(x), y_ref,
+                      f"filter-sharded output (mesh filter:{f}, {wire})")
+            filter_tp[f"{wire}_{f}"] = batch / timed(pipe, x)
+        bytes_ = pipe._sharded.collective_bytes(x.shape)
+        traffic.setdefault("filter", {
+            "dense_bytes": bytes_["dense"],
+            "packed_bytes": bytes_["packed"],
+            "dense_over_packed": bytes_["dense"] / bytes_["packed"],
+        })
+    checks["packed_traffic_5x_filter"] = (
+        4.5 < traffic["filter"]["dense_over_packed"] <= 5.0)
 
+    # -- pipeline-parallel layer sharding (uniform trunk) -------------------
+    trunk = _uniform_trunk(cfg["width"], cfg["trunk_layers"])
+    xt = rng.integers(-1, 2, (batch, ccfg.img_hw, ccfg.img_hw,
+                              cfg["width"])).astype(np.int8)
+    trunk_ref = CutiePipeline(trunk, backend="ref")
+    yt_ref = np.asarray(trunk_ref.run(xt))
+    layer_tp = {"1": batch / timed(trunk_ref, xt)}
+    for ldeg in cfg["layer_degrees"]:
+        pipe = CutiePipeline(trunk, backend="ref",
+                             mesh=MeshSpec(layer=ldeg))
+        bit_check(f"bit_exact_layer{ldeg}", pipe.run(xt), yt_ref,
+                  f"pipeline-parallel output (mesh layer:{ldeg})")
+        layer_tp[str(ldeg)] = batch / timed(pipe, xt)
+        traffic.setdefault("layer", {})
+        if ldeg == cfg["layer_degrees"][-1]:
+            bytes_ = pipe._sharded.collective_bytes(xt.shape)
+            traffic["layer"] = {
+                "dense_bytes": bytes_["dense"],
+                "packed_bytes": bytes_["packed"],
+                "dense_over_packed": bytes_["dense"] / bytes_["packed"],
+            }
+            schedule = pipe._sharded.schedule_stats()
+    checks["packed_traffic_5x_layer"] = (
+        4.5 < traffic["layer"]["dense_over_packed"] <= 5.0)
+    # microbatch padding path: batch that does not divide the microbatch
+    # count (outputs must come back in submission order)
+    pipe = CutiePipeline(trunk, backend="ref", mesh=MeshSpec(layer=2),
+                         microbatches=3)
+    bit_check("bit_exact_layer_padding", pipe.run(xt[: batch - 3]),
+              yt_ref[: batch - 3], "microbatch-padded pipelined output")
+
+    # -- wall-clock scaling check (host-core guarded) -----------------------
     n_cores = os.cpu_count() or 1
     top = str(cfg["devices"][-1])
-    checks["scaling_4x_8dev"] = (speedup[top] > 4.0 if n_cores >= 8
-                                 else None)
+    checks_guard = {}
+    if n_cores >= 8:
+        checks["scaling_4x_8dev"] = speedup[top] > 4.0
+    else:
+        checks["scaling_4x_8dev"] = None
+        checks_guard["scaling_4x_8dev"] = (
+            f"not evaluated: {n_cores} host cores < 8 — forced host "
+            f"devices share cores, so wall-clock speedup cannot "
+            f"materialize here; bit-exactness and the packed-traffic "
+            f"ratios still gate")
     return {
         "config": {**cfg, "host_cores": n_cores,
                    "layers": len(prog.layers)},
         "throughput_img_s": throughput,
         "speedup_vs_1dev": speedup,
         "filter_throughput_img_s": filter_tp,
+        "layer_throughput_img_s": layer_tp,
+        "traffic": traffic,
+        "pipeline_schedule": schedule,
         "checks": checks,
+        "checks_guard": checks_guard,
     }
 
 
@@ -142,7 +259,6 @@ def _measure(cfg: dict) -> dict:
 
 def run(smoke: bool = False) -> dict:
     """Spawn the measurement under a forced 8-host-device CPU topology."""
-    cfg = _config(smoke)
     env = dict(os.environ)
     # Replace (not keep) any inherited host-device count: a parent that
     # exported a smaller value would otherwise break the 8-device mesh.
@@ -178,11 +294,29 @@ def report(res: dict) -> str:
     for d, tp in res["throughput_img_s"].items():
         lines.append(f"| {d} | {tp:.1f} | "
                      f"{res['speedup_vs_1dev'][d]:.2f}x |")
-    lines += ["", "| filter shards | img/s |", "|---|---|"]
+    lines += ["", "| filter shards (wire) | img/s |", "|---|---|"]
     for f, tp in res["filter_throughput_img_s"].items():
         lines.append(f"| {f} | {tp:.1f} |")
+    lines += ["", "| pipeline stages (layer) | img/s |", "|---|---|"]
+    for d, tp in res["layer_throughput_img_s"].items():
+        lines.append(f"| {d} | {tp:.1f} |")
+    sched = res["pipeline_schedule"]
+    lines += [
+        "",
+        f"pipeline schedule: {sched['stages']} stages x "
+        f"{sched['microbatches']} microbatches, "
+        f"bubble {sched['bubble_fraction']:.1%}",
+        "",
+        "per-device all-gather / ring traffic (bytes, one run):",
+    ]
+    for axis, t in res["traffic"].items():
+        lines.append(f"- {axis}: dense {t['dense_bytes']} -> packed "
+                     f"{t['packed_bytes']} "
+                     f"({t['dense_over_packed']:.2f}x smaller on the wire)")
     checks = ", ".join(f"{k}={v}" for k, v in res["checks"].items())
     lines += ["", f"checks: {checks}"]
+    for k, why in res.get("checks_guard", {}).items():
+        lines.append(f"guard[{k}]: {why}")
     return "\n".join(lines)
 
 

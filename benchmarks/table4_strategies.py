@@ -13,10 +13,8 @@ from __future__ import annotations
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import inq
 from repro.data import cifar
 from repro.energy import model as E
 from repro.train import cutie_qat as Q

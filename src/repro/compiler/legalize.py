@@ -172,11 +172,8 @@ def lower_dense(graph: Graph, instance: engine.CutieInstance) -> Graph:
         if node.op != "dense":
             continue
         h, w, c = shapes[node.inputs[0]]
-        if (h, w) == (1, 1):
-            k = 1
-        elif h == w and h % 2 == 1 and h <= instance.k:
-            k = h
-        else:
+        if (h, w) != (1, 1) and not (h == w and h % 2 == 1
+                                     and h <= instance.k):
             raise _err(node, idx, (
                 f"dense over a {h}x{w}x{c} feature map is not mappable to "
                 f"the OCU buffer (needs 1x1 or odd square <= K={instance.k};"

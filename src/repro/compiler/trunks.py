@@ -144,6 +144,66 @@ def _trunk_stop(layers, i: int, in_shape, budget: int) -> tuple[int, str]:
     return j, "end"
 
 
+def plan_stages(program: engine.CutieProgram, in_shape, n_stages: int,
+                vmem_budget: int | None = None) -> list[Trunk]:
+    """Partition a program into ``n_stages`` contiguous pipeline stages.
+
+    Pipeline-parallel layer sharding (`repro.launch.cutie_mesh.
+    PipelinedExecution`) maps the paper's layer-FIFO architecture onto a
+    device ring: stage ``s`` owns layers ``[s*k, (s+1)*k)`` and streams
+    its activations to stage ``s+1`` via ``ppermute``.  The SPMD ring
+    carries ONE fixed-shape activation buffer, so every stage boundary
+    must see the same tensor shape — the program must be a uniform
+    trunk: identical weight shapes with Cin == Cout, stride 1, full
+    padding, no merged pooling.  Violations raise with the offending
+    layer named rather than silently running a wrong pipeline.
+
+    Each returned :class:`Trunk` is one device's stage; ``fused`` /
+    ``vmem_bytes`` record whether that stage would itself execute as a
+    single fused megakernel on its device (the fused-under-mesh end
+    state), via :func:`plan_segments` on the stage's slice.
+    """
+    layers = program.layers
+    n_layers = len(layers)
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_layers == 0 or n_layers % n_stages:
+        raise ValueError(
+            f"{n_layers} layers do not split into {n_stages} equal "
+            f"pipeline stages; pad the program or pick a divisor of "
+            f"{n_layers}")
+    shape0 = tuple(layers[0].weights.shape)
+    for i, instr in enumerate(layers):
+        if (tuple(instr.weights.shape) != shape0
+                or instr.weights.shape[2] != instr.weights.shape[3]):
+            raise ValueError(
+                f"layer {i}: weights {tuple(instr.weights.shape)} break "
+                f"the uniform trunk (need Cin == Cout and shape "
+                f"{shape0} everywhere); the pipeline ring carries one "
+                f"fixed-shape activation buffer")
+        if (instr.stride != (1, 1) or not instr.padding
+                or instr.pool is not None):
+            raise ValueError(
+                f"layer {i}: pipeline-parallel stages need stride-1, "
+                f"fully padded, pool-free layers (got stride="
+                f"{instr.stride}, padding={instr.padding}, "
+                f"pool={instr.pool}); spatial dims must survive every "
+                f"stage boundary")
+    k = n_layers // n_stages
+    stages = []
+    for s in range(n_stages):
+        sub = engine.CutieProgram(layers[s * k:(s + 1) * k],
+                                  program.instance)
+        segs = plan_segments(sub, in_shape, vmem_budget)
+        fused = len(segs) == 1 and segs[0].fused
+        stages.append(Trunk(
+            s * k, (s + 1) * k, fused=fused,
+            vmem_bytes=segs[0].vmem_bytes if fused else 0,
+            reason="" if fused else "/".join(
+                dict.fromkeys(g.reason for g in segs if g.reason))))
+    return stages
+
+
 def plan_segments(program: engine.CutieProgram, in_shape,
                   vmem_budget: int | None = None) -> list[Trunk]:
     """Greedy maximal-trunk segmentation under a VMEM budget.

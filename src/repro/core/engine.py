@@ -25,7 +25,6 @@ thin deprecated shim over it.  This module keeps the compiler
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

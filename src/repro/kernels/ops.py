@@ -13,11 +13,9 @@ Default: ``pallas`` when a TPU is present, else ``ref``.  Override with the
 
 from __future__ import annotations
 
-import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels import ternary_conv2d as _conv

@@ -29,8 +29,6 @@ import json
 import time
 import traceback
 
-import jax
-
 import repro.configs as configs
 from repro.launch import steps
 from repro.launch.mesh import make_production_mesh

@@ -16,7 +16,6 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # ordered (pattern, spec-builder) table; first match wins.

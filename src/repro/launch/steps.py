@@ -9,11 +9,10 @@ shannon/kernels pattern — weak-type-correct, shardable, no allocation).
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.launch import shardings as SH
 from repro.models import decoding as DEC

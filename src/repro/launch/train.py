@@ -13,12 +13,11 @@ import jax
 import numpy as np
 
 import repro.configs as configs
-from repro.data import pipeline, tokens
+from repro.data import tokens
 from repro.launch import mesh as M
-from repro.launch import shardings as SH
 from repro.models import common
 from repro.models import transformer as TF
-from repro.models.config import SHAPES, ShapeSpec, reduce_for_smoke
+from repro.models.config import ShapeSpec, reduce_for_smoke
 from repro.optim import adam
 from repro.train import loop
 

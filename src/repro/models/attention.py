@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import common as C
-from repro.models.common import BATCH, MODEL, maybe_scan, shard
+from repro.models.common import BATCH, MODEL, shard
 
 NEG_INF = -1e30
 

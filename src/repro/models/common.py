@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -93,6 +92,13 @@ BATCH = ("pod", "data")     # canonical batch-sharding axes
 MODEL = "model"
 
 
+def tree_index(tree, i):
+    """Every leaf's ``[i]`` slice — one stacked layer's params.  Binds
+    ``i`` as a parameter so call sites inside Python loops don't close
+    over the loop variable (flake8-bugbear B023)."""
+    return jax.tree.map(lambda a: a[i], tree)
+
+
 # ---------------------------------------------------------------------------
 # Scan that can be unrolled for HLO cost extraction
 # ---------------------------------------------------------------------------
@@ -110,7 +116,7 @@ def maybe_scan(body, carry, xs, *, length=None, unroll: bool = False):
     n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        xi = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        xi = None if xs is None else tree_index(xs, i)
         carry, y = body(carry, xi)
         ys.append(y)
     if ys and ys[0] is not None:

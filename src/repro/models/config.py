@@ -7,7 +7,6 @@ One `ArchConfig` instance per assigned architecture lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

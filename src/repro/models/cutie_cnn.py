@@ -28,7 +28,7 @@ def init_params(cfg: CutieCNNConfig, key) -> dict:
     ks = jax.random.split(key, len(cfg.layout) + 1)
     layers = []
     c_in = cfg.in_channels
-    for i, (op, mult, pool) in enumerate(cfg.layout):
+    for i, (_op, mult, _pool) in enumerate(cfg.layout):
         c_out = cfg.width * mult
         fan_in = 9 * c_in
         w = jax.random.normal(ks[i], (3, 3, c_in, c_out),
@@ -90,8 +90,7 @@ def forward(params, x, cfg: CutieCNNConfig, *, train: bool = True,
         params = dict(params,
                       layers=inq.apply(inq_state["layers"],
                                        params["layers"]))
-    for i, ((op, mult, pool), lp) in enumerate(
-            zip(cfg.layout, params["layers"])):
+    for (_op, _mult, pool), lp in zip(cfg.layout, params["layers"]):
         w = lp["w"] if inq_state is not None else _quant_w(
             lp["w"], cfg.weight_mode)
         z = jax.lax.conv_general_dilated(
@@ -149,7 +148,7 @@ def to_graph(params, cfg: CutieCNNConfig, inq_state=None,
                                        params["layers"]))
     g = compiler.Graph(in_channels=cfg.in_channels,
                        in_hw=(cfg.img_hw, cfg.img_hw))
-    for (op, mult, pool), lp in zip(cfg.layout, params["layers"]):
+    for (_op, _mult, pool), lp in zip(cfg.layout, params["layers"]):
         w = lp["w"]
         if inq_state is None:
             w = jnp.asarray(_quant_w(w, cfg.weight_mode))

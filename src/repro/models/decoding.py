@@ -182,7 +182,7 @@ def _decode_hybrid_stack(p, x, st, kv, pos, cfg, unroll):
         kvk, kvv = kv["k"], kv["v"]
         new_st = []
         for i in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[i], p["layers"])
+            lp = C.tree_index(p["layers"], i)
             layer_st = {k: st[k][i] for k in _SSM_KEYS}
             y, ns = mamba2.decode_step(
                 lp["mixer"], TF._norm(cfg, lp["ln"], x), cfg, layer_st)

@@ -233,7 +233,7 @@ def backbone(p, x, cfg, positions, *, unroll=False, collect_aux=True):
 
         if unroll:
             for i in range(cfg.n_layers):
-                lp = jax.tree.map(lambda a: a[i], p["layers"])
+                lp = C.tree_index(p["layers"], i)
                 x = ssm_fn(lp, x)
                 if (i + 1) % period == 0:
                     x = attn_fn(p["shared_attn"], x)

@@ -85,7 +85,9 @@ class CutiePipeline:
 
     def __init__(self, program: engine.CutieProgram,
                  backend: str | B.Backend | None = None, *,
-                 scan: bool | None = None, mesh=None):
+                 scan: bool | None = None, mesh=None,
+                 packed_collectives: bool = True,
+                 microbatches: int | None = None):
         program.validate()
         self.program = program
         self.backend = B.get_backend(backend)
@@ -102,20 +104,33 @@ class CutiePipeline:
                 # backend build (fused trunk megakernels) cannot run under
                 # it yet, so the mesh path silently ran per-layer.  Make
                 # that drop explicit — see execution_plan() for the path
-                # actually chosen.
+                # actually chosen.  The per-layer mesh path still
+                # exchanges activations 5-trits/byte packed (the fused
+                # trunks' boundary format), so only the intra-trunk fusion
+                # is lost, not the packed wire format.
                 import warnings
 
                 warnings.warn(
                     f"backend {self.backend.name!r} builds whole-program "
                     "megakernels, but mesh= execution is per-layer "
                     "shard_map: the program-level build is dropped on "
-                    "this mesh (fused trunks do not shard yet). Check "
+                    "this mesh (fused trunks do not shard yet; inter-"
+                    "layer collectives stay 5-trits/byte packed). Check "
                     "pipe.execution_plan() for the chosen path.",
                     UserWarning, stacklevel=2)
-            self._sharded = cutie_mesh.ShardedExecution(
-                program, self.backend, self.mesh_spec, scan=self.scannable)
+            if self.mesh_spec.layer > 1:
+                self._sharded = cutie_mesh.PipelinedExecution(
+                    program, self.backend, self.mesh_spec,
+                    microbatches=microbatches, packed=packed_collectives)
+            else:
+                self._sharded = cutie_mesh.ShardedExecution(
+                    program, self.backend, self.mesh_spec,
+                    scan=self.scannable, packed=packed_collectives)
             self.scannable = self._sharded.scannable
             self._lowered = self._sharded.lowered
+        elif microbatches is not None:
+            raise ValueError("microbatches= only applies to pipeline-"
+                             "parallel meshes (mesh=\"layer:N\")")
         else:
             self._lowered = [self.backend.lower(i) for i in program.layers]
         self._jit_cache: dict = {}
@@ -127,7 +142,9 @@ class CutiePipeline:
     def compile(cls, source, *,
                 instance: engine.CutieInstance = engine.GF22_SCM,
                 backend: str | B.Backend | None = None,
-                scan: bool | None = None, mesh=None, **compiler_options
+                scan: bool | None = None, mesh=None,
+                packed_collectives: bool = True,
+                microbatches: int | None = None, **compiler_options
                 ) -> "CutiePipeline":
         """Compile a network straight into a pipeline.
 
@@ -143,10 +160,13 @@ class CutiePipeline:
         """
         from repro import compiler
 
+        mesh_kw = dict(mesh=mesh, packed_collectives=packed_collectives,
+                       microbatches=microbatches)
         if isinstance(source, compiler.Graph):
             result = compiler.compile_graph(source, instance=instance,
                                             **compiler_options)
-            pipe = cls(result.program, backend=backend, scan=scan, mesh=mesh)
+            pipe = cls(result.program, backend=backend, scan=scan,
+                       **mesh_kw)
             pipe.compile_result = result
             return pipe
         if compiler_options:
@@ -159,7 +179,7 @@ class CutiePipeline:
             instrs.append(engine.compile_layer(w, bn, **(rest[0] if rest
                                                          else {})))
         return cls(engine.CutieProgram(instrs, instance), backend=backend,
-                   scan=scan, mesh=mesh)
+                   scan=scan, **mesh_kw)
 
     # -- introspection ------------------------------------------------------
 
@@ -170,6 +190,17 @@ class CutiePipeline:
     @property
     def n_layers(self) -> int:
         return len(self.program.layers)
+
+    @property
+    def batch_quantum(self) -> int:
+        """Executed batches are padded to a multiple of this: the
+        data-parallel degree, times the microbatch count on
+        pipeline-parallel meshes (each data shard must split into whole
+        microbatches).  1 when unsharded."""
+        if self.mesh_spec is None:
+            return 1
+        return self.mesh_spec.data * getattr(self._sharded,
+                                             "microbatches", 1)
 
     @property
     def n_jit_variants(self) -> int:
@@ -209,13 +240,25 @@ class CutiePipeline:
                         and getattr(tracer, "kernel_stats", False))
         fallback = None
         if self._sharded is not None:
-            if has_program:
-                reason = ("mesh execution is per-layer shard_map; the "
-                          "backend's program-level build is dropped")
+            wire = ("5-trits/byte packed"
+                    if getattr(self._sharded, "packed", False) else "dense")
+            if self.mesh_spec.layer > 1:
+                mode = "sharded-pipeline"
+                reason = (f"layer mesh axis: one trunk stage per device, "
+                          f"microbatches streamed through a ppermute "
+                          f"ring ({wire} activations)")
+            elif has_program:
+                reason = ("mesh execution is per-layer shard_map with "
+                          f"{wire} inter-layer collectives; the "
+                          "backend's program-level build (fused trunk "
+                          "megakernels) is dropped — fused trunks do "
+                          "not shard yet")
                 fallback = "mesh"
+                mode = "sharded-per-layer"
             else:
-                reason = "mesh= requested; per-layer shard_map"
-            mode = "sharded-per-layer"
+                reason = (f"mesh= requested; per-layer shard_map with "
+                          f"{wire} inter-layer collectives")
+                mode = "sharded-per-layer"
         elif has_program and (tracer is None or kernel_stats):
             reason = (f"backend {self.backend.name!r} provides "
                       "build_program (whole-program megakernels)")
@@ -245,6 +288,12 @@ class CutiePipeline:
             "reason": reason,
             "fallback": fallback,
         }
+        if self._sharded is not None:
+            plan["collectives"] = ("packed"
+                                   if getattr(self._sharded, "packed",
+                                              False) else "dense")
+            if hasattr(self._sharded, "schedule_stats"):
+                plan["pipeline"] = self._sharded.schedule_stats()
         if in_shape is not None and hasattr(self.backend, "plan"):
             plan["segments"] = [
                 {"start": s.start, "stop": s.stop, "fused": s.fused,

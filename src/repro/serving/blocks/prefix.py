@@ -16,7 +16,7 @@ same, which is what lets both state families share one pool.
 from __future__ import annotations
 
 import hashlib
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 

@@ -250,8 +250,8 @@ class StatePagedStore:
     def write(self, pages: list, bid, state) -> list:
         """Store one sequence's state pytree into block ``bid``."""
         out = []
-        for pg, leaf, shape in zip(pages, jax.tree.leaves(state),
-                                   self.shapes):
+        for pg, leaf, _shape in zip(pages, jax.tree.leaves(state),
+                                    self.shapes):
             if self.codec == "trit":
                 leaf = pack_last_axis(leaf.reshape(-1))
             out.append(pg.at[bid].set(leaf))
@@ -261,8 +261,8 @@ class StatePagedStore:
         """Scatter a batch of states (leaves with a leading batch axis
         matching ``bids (B,)``) into their blocks in one op."""
         out = []
-        for pg, leaf, shape in zip(pages, jax.tree.leaves(states),
-                                   self.shapes):
+        for pg, leaf, _shape in zip(pages, jax.tree.leaves(states),
+                                    self.shapes):
             if self.codec == "trit":
                 leaf = pack_last_axis(leaf.reshape(leaf.shape[0], -1))
             out.append(pg.at[bids].set(leaf.astype(pg.dtype)))

@@ -133,7 +133,10 @@ class ProgramExecutor(Executor):
         if not buckets or buckets[0] < 1:
             raise ValueError(f"buckets must be positive ints, "
                              f"got {buckets}")
-        dp = self.data_parallel
+        # round buckets so every executed batch splits evenly across the
+        # mesh: the data-parallel degree, times the microbatch count on
+        # pipeline-parallel (layer) meshes
+        dp = getattr(pipeline, "batch_quantum", 1) or 1
         self.buckets = tuple(sorted({-(-b // dp) * dp for b in buckets}))
         self.head = head
         self.tracer = tracer
@@ -207,6 +210,16 @@ class ProgramExecutor(Executor):
                                energy_uj=self._price(rows),
                                per_device_live=self._per_device_live(live,
                                                                      size))
+
+    @property
+    def pipeline_schedule(self) -> Optional[dict]:
+        """Static pipeline-parallel schedule accounting (stage count,
+        per-stage occupancy, bubble fraction) for layer-sharded models;
+        None otherwise.  Rides into ``engine.stats()["sharding"]``."""
+        sharded = getattr(self.pipeline, "_sharded", None)
+        if sharded is None or not hasattr(sharded, "schedule_stats"):
+            return None
+        return sharded.schedule_stats()
 
     def _per_device_live(self, live: int, size: int) -> Optional[list]:
         """Live slots landing on each data-parallel device (batch shards

@@ -34,10 +34,12 @@ class ModelRegistry:
 
         ``backend``/``buckets``/``head``/``tracer``/``mesh`` configure
         the ProgramExecutor built for program-like sources (``mesh``
-        runs the model sharded over a device mesh — see
+        runs the model sharded over a device mesh — data/filter/layer
+        axes, packed 5-trits/byte inter-device collectives; see
         `repro.launch.cutie_mesh`); ``instance``/``compiler_options``
         apply to the Graph compile path only.  An Executor instance is
-        registered as-is.
+        registered as-is.  Buckets round up to the meshed pipeline's
+        batch quantum (data degree x microbatches).
         """
         executor = self._build(source, backend=backend, buckets=buckets,
                                head=head, tracer=tracer, instance=instance,

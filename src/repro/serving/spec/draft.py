@@ -23,7 +23,6 @@ states the propose scan collected.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.cutie_cnn import CutieCNNConfig
 from repro.core import inq

@@ -52,7 +52,7 @@ def test_paper_cnn_compiler_vs_hand_compiled_bit_identical():
     inst = engine.CutieInstance(n_i=16, n_o=16)
 
     instrs = []        # the pre-compiler hand-written path, as an oracle
-    for (op, mult, pool), lp in zip(cfg.layout, params["layers"]):
+    for (_op, _mult, pool), lp in zip(cfg.layout, params["layers"]):
         w = jnp.asarray(cutie_cnn._quant_w(lp["w"], cfg.weight_mode))
         instrs.append(engine.compile_layer(
             w, dict(gamma=lp["gamma"], beta=lp["beta"], mean=lp["mean"],

@@ -1,6 +1,5 @@
 """Bit-true CUTIE engine: compilation, execution, pooling, QAT parity."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.cutie_cnn import CutieCNNConfig
-from repro.core import engine, folding
+from repro.core import engine
 from repro.models import cutie_cnn
 
 
@@ -113,7 +112,6 @@ def test_qat_graph_vs_engine_parity():
     """Float QAT graph predictions == bit-true engine on the same params."""
     cfg = CutieCNNConfig(width=8, thermometer_m=4)
     params = cutie_cnn.init_params(cfg, jax.random.PRNGKey(0))
-    x_img = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32))
     from repro.core import thermometer as TH
     lv = TH.quantize_to_levels(
         jax.random.uniform(jax.random.PRNGKey(2), (4, 32, 32, 3)), 8)

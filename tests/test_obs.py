@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import compiler, obs
+from repro import compiler
 from repro.core import engine
 from repro.kernels import ternary_conv2d as K
 from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,

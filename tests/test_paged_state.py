@@ -172,7 +172,7 @@ def test_manager_commit_is_insert_if_absent():
     toks = np.arange(10)
     m.create(1, toks, 12)
     m.commit(1)
-    s2 = m.create(2, toks, 12)
+    m.create(2, toks, 12)
     m.commit(2)                              # duplicate chain: no steal
     hs = chain_hashes(toks, 4)
     assert m.cache.get(hs[0]) == m.get(1).table[0]

@@ -120,12 +120,28 @@ def test_data_parallel_padding_bit_exact(host_devices, uniform_prog,
 
 @pytest.mark.parametrize("spec", ["filter:4", "data:2,filter:2",
                                   "filter:3"])
+@pytest.mark.parametrize("packed", [True, False])
 def test_filter_sharding_nondividing_channels(host_devices, uniform_prog,
-                                              uniform_oracle, spec):
-    # 6 output channels never divide 4 (or 3 evenly at every layer edge)
+                                              uniform_oracle, spec, packed):
+    # 6 output channels never divide 4 (or 3 evenly at every layer edge),
+    # so the pack/unpack boundary sees non-multiple-of-5 shard sizes too
     x, y_ref = uniform_oracle
-    pipe = CutiePipeline(uniform_prog, backend="ref", mesh=spec)
+    pipe = CutiePipeline(uniform_prog, backend="ref", mesh=spec,
+                         packed_collectives=packed)
     assert (np.asarray(pipe.run(x)) == y_ref).all()
+
+
+def test_packed_collectives_cut_traffic(host_devices, uniform_prog):
+    # the wire format is the one thing packed_collectives changes: same
+    # bits out, ~5x fewer bytes exchanged between devices
+    pipe = CutiePipeline(uniform_prog, backend="ref", mesh="filter:2")
+    traffic = pipe._sharded.collective_bytes((8, 8, 8, 6))
+    assert traffic["on_wire"] == traffic["packed"]
+    assert 4.5 < traffic["dense"] / traffic["packed"] <= 5.0
+    dense = CutiePipeline(uniform_prog, backend="ref", mesh="filter:2",
+                          packed_collectives=False)
+    assert dense._sharded.collective_bytes(
+        (8, 8, 8, 6))["on_wire"] == traffic["dense"]
 
 
 @pytest.mark.parametrize("backend", ["ref", "pallas", "packed"])
@@ -177,7 +193,8 @@ def test_engine_submit_result_meshed(host_devices, uniform_prog,
     for i, h in enumerate(handles):
         assert (np.asarray(h.result()) == y_ref[i]).all()
     stats = eng.stats()
-    assert stats["sharding"]["m"] == {"data": 4, "filter": 1, "devices": 4}
+    assert stats["sharding"]["m"] == {"data": 4, "filter": 1, "layer": 1,
+                                      "devices": 4}
     occ = stats["per_device_occupancy"]["m"]
     assert len(occ) == 4 and occ[0] == 1.0
     # padded batches stay multiples of the data degree
