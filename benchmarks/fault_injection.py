@@ -1,0 +1,359 @@
+"""Fault-injection chaos benchmark: the engine survives and stays exact.
+
+Three seeded, deterministic scenarios (recorded in BENCH_faults.json and
+gated as ``SPEED_CHECKS`` under ``benchmarks.run --compare``):
+
+1. **chaos** — a Poisson step-time trace of CNN requests against a
+   `FaultyExecutor` injecting transient raises, slow steps, NaN outputs,
+   poison requests and a consecutive device-loss window (which drives
+   the primary model into quarantine, rerouting to a registered
+   fallback serving the *same* program).  Checks: the engine never
+   dies, no request is lost (every handle reaches a terminal state),
+   every completed request's output is bit-identical to a fault-free
+   reference run, and every non-poisoned request completes.
+2. **shed** — a burst past ``max_queue_depth``: admission sheds the
+   overflow at submit() and everything admitted still completes.
+3. **restart** — the elastic-recovery scenario: an LLM serving engine
+   is killed mid-decode, its paged serving state checkpointed
+   (`repro.serving.snapshot`), restored into a fresh engine, and the
+   interrupted trace finishes **bit-identically** to an uninterrupted
+   run.
+
+CLI (used by the CI serving-smoke job):
+
+    PYTHONPATH=src python benchmarks/fault_injection.py --smoke \\
+        --step-timeout 60
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.serving import (CutieEngine, FaultPlan, FaultPolicy,
+                           FaultyExecutor, LLMExecutor, LoadShedError,
+                           RequestStatus, ServerConfig,
+                           restore_serving_state, save_serving_state)
+
+ARRIVAL_RATE = 0.7            # requests per engine step (Poisson)
+
+# every check is an intra-run invariant (exactness/survival), so the
+# whole gate is host-invariant; wall-clock numbers are informational
+SPEED_CHECKS = ("engine_survived", "no_request_lost",
+                "survivors_bitexact", "poison_isolated",
+                "quarantine_fired", "shedding_caps_queue",
+                "shed_admitted_complete", "restart_bitexact")
+
+_TERMINAL = (RequestStatus.DONE, RequestStatus.CANCELLED,
+             RequestStatus.FAILED)
+
+
+def _deadline(step_timeout):
+    return None if step_timeout is None else \
+        time.monotonic() + step_timeout
+
+
+def _check_deadline(deadline, what: str):
+    if deadline is not None and time.monotonic() > deadline:
+        raise RuntimeError(f"{what} exceeded --step-timeout budget")
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: CNN chaos trace
+# ---------------------------------------------------------------------------
+
+
+def _cnn_program(c=8, depth=2, seed=0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine as core_engine
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), depth)
+    instrs = []
+    for k in keys:
+        k1, k2 = jax.random.split(k)
+        w = jax.random.normal(k1, (3, 3, c, c))
+        bn = {"gamma": jax.random.normal(k2, (c,)) + 0.5,
+              "beta": jnp.zeros((c,)), "mean": jnp.zeros((c,)),
+              "var": jnp.ones((c,))}
+        instrs.append(core_engine.compile_layer(w, bn))
+    return core_engine.CutieProgram(
+        instrs, core_engine.CutieInstance(n_i=c, n_o=c))
+
+
+def _cnn_trace(n: int, seed: int, c=8, hw=8) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE, size=n))
+    return [{"t": float(t[i]), "tag": f"i{i}",
+             "img": rng.integers(-1, 2, size=(hw, hw, c)).astype(np.int8)}
+            for i in range(n)]
+
+
+def _drive_cnn(eng, trace, model: str, deadline) -> dict:
+    """Open-loop step-time replay; returns {tag: handle}."""
+    handles, i, steps = {}, 0, 0
+    while i < len(trace) or eng.busy():
+        _check_deadline(deadline, "chaos trace")
+        while i < len(trace) and trace[i]["t"] <= steps:
+            handles[trace[i]["tag"]] = eng.submit(
+                trace[i]["img"], model=model, tag=trace[i]["tag"])
+            i += 1
+        if eng.busy() and not eng.step():
+            raise RuntimeError("engine busy but made no progress")
+        steps += 1
+        if steps > 100_000:
+            raise RuntimeError("chaos trace did not drain")
+    return handles
+
+
+def _chaos_scenario(n: int, seed: int, deadline) -> dict:
+    from repro.serving import ProgramExecutor
+
+    program = _cnn_program(seed=seed)
+    trace = _cnn_trace(n, seed + 1)
+    plan = FaultPlan(seed=seed, raise_rate=0.12, slow_rate=0.05,
+                     nan_rate=0.08, poison_rate=0.08, slow_s=0.005,
+                     device_loss_at=12, device_loss_calls=6,
+                     start_after=2)
+    policy = FaultPolicy(max_retries=5, backoff_base=0.001,
+                         backoff_cap=0.01, quarantine_after=5)
+
+    # fault-free reference: same trace, same program, clean executor
+    ref_eng = CutieEngine("fcfs")
+    ref_eng.register("cnn", program, buckets=(1, 2, 4))
+    ref_handles = _drive_cnn(ref_eng, trace, "cnn", deadline)
+    ref = {tag: h.request.result for tag, h in ref_handles.items()}
+
+    eng = CutieEngine("fcfs", policy=policy)
+    # fallback serves the SAME program, so rerouted traffic must stay
+    # bit-identical to the reference
+    eng.register("backup", program, buckets=(1, 2, 4))
+    faulty = FaultyExecutor(
+        ProgramExecutor(eng.registry["backup"].pipeline,
+                        buckets=(1, 2, 4)), plan)
+    eng.register("cnn", faulty, fallback="backup")
+    survived, err = True, None
+    try:
+        handles = _drive_cnn(eng, trace, "cnn", deadline)
+    except Exception as e:  # noqa: BLE001 — survival IS the metric
+        survived, err, handles = False, repr(e), {}
+
+    poisoned = {t["tag"] for t in trace if plan.poisoned(t["tag"])}
+    done = {tag: h for tag, h in handles.items()
+            if h.status is RequestStatus.DONE}
+    stats = eng.stats()["faults"]
+    checks = {
+        "engine_survived": survived,
+        "no_request_lost": survived and len(handles) == n and all(
+            h.status in _TERMINAL for h in handles.values()),
+        "survivors_bitexact": survived and bool(done) and all(
+            np.array_equal(h.request.result, ref[tag])
+            for tag, h in done.items()),
+        "poison_isolated": survived and all(
+            handles[tag].status is RequestStatus.DONE
+            for tag in handles if tag not in poisoned),
+        "quarantine_fired": stats["n_quarantines"] >= 1,
+    }
+    return {
+        "n_requests": n,
+        "n_poisoned": len(poisoned),
+        "n_done": len(done),
+        "n_failed": sum(h.status is RequestStatus.FAILED
+                        for h in handles.values()),
+        "faults_injected": dict(faulty.injected),
+        "n_retries": stats["n_retries"],
+        "n_quarantines": stats["n_quarantines"],
+        "n_rerouted": stats["n_rerouted"],
+        "error": err,
+        "checks": checks,
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: load shedding under a burst
+# ---------------------------------------------------------------------------
+
+
+def _shed_scenario(seed: int, deadline) -> dict:
+    program = _cnn_program(seed=seed + 7)
+    eng = CutieEngine("fcfs",
+                      policy=FaultPolicy(max_queue_depth=3))
+    eng.register("cnn", program, buckets=(1,))
+    rng = np.random.default_rng(seed + 8)
+    admitted, shed = [], 0
+    for _ in range(10):                       # burst with no draining
+        img = rng.integers(-1, 2, size=(8, 8, 8)).astype(np.int8)
+        try:
+            admitted.append(eng.submit(img, model="cnn"))
+        except LoadShedError:
+            shed += 1
+    _check_deadline(deadline, "shed burst")
+    eng.run()
+    checks = {
+        "shedding_caps_queue": shed > 0 and len(admitted) <= 3,
+        "shed_admitted_complete": all(
+            h.status is RequestStatus.DONE for h in admitted),
+    }
+    return {"n_submitted": 10, "n_admitted": len(admitted),
+            "n_shed": shed, "checks": checks}
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: kill mid-decode, restore, finish bit-identically
+# ---------------------------------------------------------------------------
+
+
+def _llm_model(smoke: bool):
+    import jax
+
+    import repro.configs as configs
+    from repro.models import transformer as TF
+    from repro.models.config import reduce_for_smoke
+
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(
+        n_layers=1 if smoke else 2)
+    return TF.init_params(cfg, jax.random.PRNGKey(0)), cfg
+
+
+def _llm_trace(n: int, seed: int) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(1, 90, size=24) for _ in range(2)]
+    t = np.cumsum(rng.exponential(2.0, size=n))
+    return [{"t": float(t[i]),
+             "prompt": np.concatenate([
+                 prefixes[int(rng.integers(2))],
+                 rng.integers(1, 90, size=4)]).astype(np.int32)}
+            for i in range(n)]
+
+
+def _restart_scenario(smoke: bool, seed: int, tmp_root: str,
+                      deadline) -> dict:
+    params, cfg = _llm_model(smoke)
+    scfg = ServerConfig(paged=True, n_slots=4, max_len=64, block_size=8,
+                        max_new_tokens=8, temperature=0.0)
+    n = 6 if smoke else 10
+    trace = _llm_trace(n, seed + 21)
+
+    def fresh():
+        eng = CutieEngine("fcfs")
+        eng.register("llm", LLMExecutor(params, cfg, scfg))
+        return eng
+
+    def drive(eng, submitted, start_i, stop_step=None):
+        """Replay from trace index ``start_i``; returns the next index
+        (== len(trace) when it drained)."""
+        i, steps = start_i, 0
+        while i < len(trace) or eng.busy():
+            _check_deadline(deadline, "restart trace")
+            while i < len(trace) and trace[i]["t"] <= steps:
+                submitted[i] = eng.submit(trace[i]["prompt"], model="llm")
+                i += 1
+            if stop_step is not None and steps >= stop_step:
+                return i
+            if eng.busy() and not eng.step():
+                raise RuntimeError("engine busy but made no progress")
+            steps += 1
+            if steps > 100_000:
+                raise RuntimeError("restart trace did not drain")
+        return i
+
+    # uninterrupted reference
+    ref_handles: dict[int, object] = {}
+    drive(fresh(), ref_handles, 0)
+    ref = {i: h.request.result for i, h in ref_handles.items()}
+
+    # interrupted run: kill mid-decode, checkpoint, restore, continue
+    eng1 = fresh()
+    submitted: dict[int, object] = {}
+    kill_step = 6
+    next_i = drive(eng1, submitted, 0, stop_step=kill_step)
+    in_flight = [h for h in submitted.values()
+                 if h.status in (RequestStatus.QUEUED,
+                                 RequestStatus.RUNNING)]
+    save_serving_state(eng1, tmp_root)
+
+    eng2 = fresh()
+    restored = restore_serving_state(eng2, tmp_root)
+    uid_to_idx = {h.uid: i for i, h in submitted.items()}
+    results: dict[int, object] = {
+        i: h.request.result for i, h in submitted.items()
+        if h.status is RequestStatus.DONE}       # finished pre-kill
+    cont: dict[int, object] = {}
+    drive(eng2, cont, next_i)                    # rest of the trace
+    for old_uid, h in restored.items():
+        results[uid_to_idx[old_uid]] = h.request.result
+    for i, h in cont.items():
+        results[i] = h.request.result
+
+    bitexact = (sorted(results) == sorted(ref)
+                and all(results[i] == ref[i] for i in ref))
+    return {
+        "n_requests": n,
+        "n_in_flight_at_kill": len(in_flight),
+        "kill_step": kill_step,
+        "checks": {"restart_bitexact": bitexact and len(in_flight) > 0},
+    }
+
+
+# ---------------------------------------------------------------------------
+# harness entry points
+# ---------------------------------------------------------------------------
+
+
+def run(smoke: bool = False, seed: int = 0,
+        step_timeout: float | None = None) -> dict:
+    import tempfile
+
+    n_chaos = 16 if smoke else 48
+    chaos = _chaos_scenario(n_chaos, seed, _deadline(step_timeout))
+    shed = _shed_scenario(seed, _deadline(step_timeout))
+    with tempfile.TemporaryDirectory() as d:
+        restart = _restart_scenario(smoke, seed, d,
+                                    _deadline(step_timeout))
+    return {
+        "config": {"smoke": smoke, "seed": seed, "n_chaos": n_chaos},
+        "chaos": {k: v for k, v in chaos.items() if k != "checks"},
+        "shed": {k: v for k, v in shed.items() if k != "checks"},
+        "restart": {k: v for k, v in restart.items() if k != "checks"},
+        "checks": {**chaos["checks"], **shed["checks"],
+                   **restart["checks"]},
+    }
+
+
+def report(res: dict) -> str:
+    c, s, r = res["chaos"], res["shed"], res["restart"]
+    lines = [
+        "# Fault injection — survival, exactness, elastic recovery",
+        f"chaos: {c['n_requests']} requests, faults injected "
+        f"{c['faults_injected']}, {c['n_done']} done / "
+        f"{c['n_failed']} failed ({c['n_poisoned']} poisoned), "
+        f"{c['n_retries']} retries, {c['n_quarantines']} quarantine(s), "
+        f"{c['n_rerouted']} rerouted",
+        f"shed: {s['n_shed']}/{s['n_submitted']} shed at the admission "
+        f"cap, {s['n_admitted']} admitted and completed",
+        f"restart: {r['n_in_flight_at_kill']} request(s) in flight at "
+        f"kill step {r['kill_step']}; restored run bit-identical",
+        f"checks: {res['checks']}",
+    ]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace + 1-layer LLM (CI mode)")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="per-scenario wall-clock budget in seconds")
+    args = ap.parse_args(argv)
+    res = run(smoke=args.smoke, seed=args.seed,
+              step_timeout=args.step_timeout)
+    print(report(res))
+    return 0 if all(res["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

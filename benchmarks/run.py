@@ -36,11 +36,11 @@ import subprocess
 import time
 import traceback
 
-from benchmarks import (backend_parity, compiler_report, fig6_channels,
-                        fig10_switching, fig11_energy, llm_serving,
-                        roofline_report, serving_load, sharding_scaling,
-                        spec_decode, table2_tiling, table4_strategies,
-                        table5_sota)
+from benchmarks import (backend_parity, compiler_report, fault_injection,
+                        fig6_channels, fig10_switching, fig11_energy,
+                        llm_serving, roofline_report, serving_load,
+                        sharding_scaling, spec_decode, table2_tiling,
+                        table4_strategies, table5_sota)
 
 HEAVY = {"table4", "fig11", "compiler"}
 
@@ -58,6 +58,7 @@ BENCHES = {
     "sharding": sharding_scaling,
     "llm_serving": llm_serving,
     "spec_decode": spec_decode,
+    "faults": fault_injection,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -51,7 +51,7 @@ def _flatten(tree) -> list[tuple[str, object]]:
 
 
 def _is_trit(a: np.ndarray) -> bool:
-    if a.dtype != np.int8 or a.size == 0 or a.size % 5 != 0:
+    if a.dtype != np.int8 or a.size == 0:
         return False
     mn, mx = a.min(), a.max()
     return mn >= -1 and mx <= 1
@@ -65,9 +65,19 @@ _NATIVE = {"bool", "int8", "int16", "int32", "int64", "uint8", "uint16",
            "complex64", "complex128"}
 
 
-def _pack(a: np.ndarray) -> np.ndarray:
-    d = (a.reshape(-1, 5).astype(np.int16) + 1).astype(np.uint16)
-    return (d @ _POW3).astype(np.uint8)
+def _pack(a: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pack trits 5/byte; zero-pads the tail when size % 5 != 0.
+
+    Returns ``(packed, pad)``; the pad count is recorded in the manifest
+    so restore can strip it (the padded trits decode as 0 and would
+    otherwise corrupt the reshape).
+    """
+    flat = a.reshape(-1)
+    pad = (-flat.size) % 5
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.int8)])
+    d = (flat.reshape(-1, 5).astype(np.int16) + 1).astype(np.uint16)
+    return (d @ _POW3).astype(np.uint8), pad
 
 
 def _unpack(b: np.ndarray, shape) -> np.ndarray:
@@ -76,8 +86,9 @@ def _unpack(b: np.ndarray, shape) -> np.ndarray:
     for _ in range(5):
         digits.append(v % 3)
         v //= 3
-    d = np.stack(digits, -1).astype(np.int8) - 1
-    return d.reshape(shape)
+    d = (np.stack(digits, -1).astype(np.int8) - 1).reshape(-1)
+    n = int(np.prod(np.asarray(shape, np.int64))) if len(shape) else 1
+    return d[:n].reshape(shape)
 
 
 def save(root: str, step: int, tree, extra: dict | None = None,
@@ -94,7 +105,9 @@ def save(root: str, step: int, tree, extra: dict | None = None,
                  "encoding": "raw"}
         if _is_trit(a):
             entry["encoding"] = "trit5"
-            a = _pack(a)
+            a, pad = _pack(a)
+            if pad:
+                entry["pad"] = pad
         elif a.dtype.kind == "V" or str(a.dtype) not in _NATIVE:
             # ml_dtypes (bfloat16/fp8) don't round-trip through np.save;
             # store the raw bytes and re-view on restore.

@@ -9,6 +9,13 @@ latency / queue-depth / switching-energy stats.  LLM decode memory is
 content-hash prefix reuse, LRU eviction and copy-on-write forks behind
 `LLMExecutor`'s split `prefill()` / `decode()` paths.
 
+Failure handling is first-class: :mod:`repro.serving.faults` provides a
+deterministic fault injector (`FaultPlan` / `FaultyExecutor`) and the
+engine's recovery policy (`FaultPolicy` — retry with backoff, batch
+bisection, load shedding, quarantine with fallback), while
+:mod:`repro.serving.snapshot` checkpoints the whole serving state so a
+killed engine resumes in-flight decodes bit-identically.
+
 The PR-1/PR-3 `Server` / `CutieServer` adapter shims are retired:
 register an executor on a `CutieEngine` (or use
 `CutiePipeline.engine()`) instead.
@@ -21,6 +28,12 @@ from repro.serving.engine import CutieEngine, percentiles  # noqa: F401
 from repro.serving.executors import (DEFAULT_BUCKETS,  # noqa: F401
                                      ExecutionReport, Executor,
                                      ProgramExecutor)
+from repro.serving.faults import (FAULT_KINDS, DeviceLost,  # noqa: F401
+                                  FaultPlan, FaultPolicy, FaultyExecutor,
+                                  GarbageOutputError, LoadShedError,
+                                  ModelQuarantinedError,
+                                  PoisonedRequestError, RequestTimeout,
+                                  TransientFault)
 from repro.serving.llm import (ExistingPrefix, LLMExecutor,  # noqa: F401
                                PrefillResult, ServerConfig)
 from repro.serving.registry import ModelRegistry  # noqa: F401
@@ -30,6 +43,8 @@ from repro.serving.request import (Request, RequestCancelled,  # noqa: F401
 from repro.serving.scheduler import (SCHEDULERS, DeadlineScheduler,  # noqa: F401
                                      FCFSScheduler, PriorityScheduler,
                                      Scheduler, get_scheduler)
+from repro.serving.snapshot import (restore_serving_state,  # noqa: F401
+                                    save_serving_state)
 
 __all__ = [
     "CutieEngine", "percentiles",
@@ -42,4 +57,9 @@ __all__ = [
     "SpecExecutor", "SpecConfig",
     "BlockPool", "OutOfBlocks", "PrefixCache", "PagedSequenceManager",
     "KVPagedStore", "StatePagedStore",
+    "FaultPlan", "FaultPolicy", "FaultyExecutor", "FAULT_KINDS",
+    "TransientFault", "DeviceLost", "PoisonedRequestError",
+    "GarbageOutputError", "LoadShedError", "ModelQuarantinedError",
+    "RequestTimeout",
+    "save_serving_state", "restore_serving_state",
 ]

@@ -175,6 +175,28 @@ class PagedSequenceManager:
                 pairs.append(pair)
         return pairs
 
+    # -- serving-state checkpoint -------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of every live sequence's paging record
+        (block tables reference physical ids; the pool snapshots its
+        own refcounts separately)."""
+        return {"seqs": [
+            {"rid": int(s.rid), "tokens": s.tokens.tolist(),
+             "table": [int(b) for b in s.table],
+             "n_cached": int(s.n_cached), "hashes": list(s.hashes)}
+            for s in self._seqs.values()]}
+
+    def load_state(self, state: dict) -> None:
+        self._seqs = {
+            int(e["rid"]): SeqBlocks(
+                rid=int(e["rid"]),
+                tokens=np.asarray(e["tokens"], np.int64),
+                table=[int(b) for b in e["table"]],
+                n_cached=int(e["n_cached"]),
+                hashes=[str(h) for h in e["hashes"]])
+            for e in state["seqs"]}
+
     # -- views --------------------------------------------------------------
 
     def get(self, rid: int) -> SeqBlocks:

@@ -149,6 +149,35 @@ class BlockPool:
         else:
             self._free.append(bid)
 
+    # -- serving-state checkpoint -------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot of the allocator (free list order, refs,
+        hash registrations, LRU order of the cached set)."""
+        return {
+            "free": [int(b) for b in self._free],
+            "ref": {str(b): int(n) for b, n in self._ref.items()},
+            "hash": {str(b): h for b, h in self._hash.items()},
+            "cached": [[int(b), h] for b, h in self._cached.items()],
+            "evictions": int(self.evictions),
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict`, onto a pool of the same size."""
+        accounted = (len(state["free"]) + len(state["ref"])
+                     + len(state["cached"]))
+        if accounted != self.capacity:
+            raise ValueError(
+                f"pool snapshot covers {accounted} blocks but this pool "
+                f"has capacity {self.capacity}; restore into a pool of "
+                "the size that saved")
+        self._free = deque(int(b) for b in state["free"])
+        self._ref = {int(b): int(n) for b, n in state["ref"].items()}
+        self._hash = {int(b): str(h) for b, h in state["hash"].items()}
+        self._cached = OrderedDict(
+            (int(b), str(h)) for b, h in state["cached"])
+        self.evictions = int(state["evictions"])
+
     # -- prefix-cache integration -------------------------------------------
 
     def set_hash(self, bid: int, content_hash: str) -> None:

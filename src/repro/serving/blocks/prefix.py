@@ -98,6 +98,19 @@ class PrefixCache:
         self.hit_tokens += len(matched_b) * block_size
         return matched_h, matched_b
 
+    # -- serving-state checkpoint -------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot (hash map + hit accounting)."""
+        return {"map": dict(self._map),
+                "lookup_tokens": int(self.lookup_tokens),
+                "hit_tokens": int(self.hit_tokens)}
+
+    def load_state(self, state: dict) -> None:
+        self._map = {str(h): int(b) for h, b in state["map"].items()}
+        self.lookup_tokens = int(state["lookup_tokens"])
+        self.hit_tokens = int(state["hit_tokens"])
+
     @property
     def hit_rate(self) -> Optional[float]:
         """Cached fraction of all prompt tokens probed so far."""

@@ -77,6 +77,16 @@ class Executor:
         """True while previously admitted requests are still in flight."""
         return False
 
+    def evict(self, uid: int) -> bool:
+        """Forget any resident/partial state held for request ``uid``.
+
+        The engine calls this on the failure paths (retry, bisect,
+        quarantine, timeout) before a request leaves the executor, so a
+        later re-admission never collides with leaked state.  One-shot
+        executors hold none; returns True when something was released.
+        """
+        return False
+
     def extra_stats(self) -> Optional[dict]:
         """Executor-specific accounting merged into ``engine.stats()``
         (e.g. the paged-state block/prefix counters); None to omit."""

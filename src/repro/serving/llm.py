@@ -484,6 +484,94 @@ class LLMExecutor(Executor):
                 pairs.append(pair)
         self.kv_store.apply_copies(pairs)
 
+    # -- engine failure paths ------------------------------------------------
+
+    def evict(self, uid: int) -> bool:
+        """Release everything held for ``uid`` (engine failure paths:
+        retry, bisect, quarantine, timeout).  Defensive against partial
+        admission — a prefill that died mid-way may have registered the
+        prompt or the sequence without ever occupying a slot."""
+        found = False
+        for i, r in enumerate(self.slots):
+            if r is not None and r.uid == uid:
+                self._release(i)
+                found = True
+                break
+        self._tokens.pop(uid, None)
+        self._prompts.pop(uid, None)
+        if self.scfg.paged and not self.is_ssm and self.manager.has(uid):
+            self.manager.free(uid)
+        return found
+
+    # -- serving-state checkpoint --------------------------------------------
+
+    def snapshot(self) -> tuple[dict, dict]:
+        """All mutable serving state as ``(arrays, meta)``.
+
+        ``arrays`` is a pytree of device arrays (paged KV/state pages,
+        slot positions, pending tokens, the sampling PRNG key) for the
+        checkpoint leaf store — ternary state pages trit-pack 5/byte
+        there for free.  ``meta`` is JSON-safe host bookkeeping (slot
+        residency, emitted tokens, prompts, pool/prefix/block-table
+        state).  ``restore()`` is the exact inverse; a fresh executor
+        built from the same ``(params, cfg, scfg)`` continues decoding
+        bit-identically.
+        """
+        tree: dict = {"pos": self.pos, "cur_tok": self.cur_tok,
+                      "rng_key": self._key}
+        if self.scfg.paged:
+            if self.is_ssm:
+                tree["pages"] = self.state_store.pages
+                tree["slot_bids"] = self._slot_bids
+            else:
+                tree["pages"] = self.kv_store.pages
+        else:
+            tree["caches"] = self.caches
+        meta: dict = {
+            "slots": [r.uid if r is not None else None
+                      for r in self.slots],
+            "tokens": {str(u): [int(t) for t in v]
+                       for u, v in self._tokens.items()},
+            "prompts": {str(u): np.asarray(v).tolist()
+                        for u, v in self._prompts.items()},
+            "prefill_tokens": int(self.prefill_tokens),
+            "prefill_tokens_computed": int(self.prefill_tokens_computed),
+            "pool": self.pool.state_dict(),
+            "cache": self.cache.state_dict(),
+        }
+        if self.scfg.paged and not self.is_ssm:
+            meta["manager"] = self.manager.state_dict()
+        return tree, meta
+
+    def restore(self, tree: dict, meta: dict) -> None:
+        """Load a :meth:`snapshot` into this executor (same config)."""
+        self.pos = jnp.asarray(np.asarray(tree["pos"]), jnp.int32)
+        self.cur_tok = jnp.asarray(np.asarray(tree["cur_tok"]), jnp.int32)
+        self._key = jnp.asarray(np.asarray(tree["rng_key"]), jnp.uint32)
+        if self.scfg.paged:
+            if self.is_ssm:
+                self.state_store.pages = [jnp.asarray(p)
+                                          for p in tree["pages"]]
+                self._slot_bids = jnp.asarray(
+                    np.asarray(tree["slot_bids"]), jnp.int32)
+            else:
+                self.kv_store.pages = {k: jnp.asarray(v)
+                                       for k, v in tree["pages"].items()}
+        else:
+            self.caches = jax.tree.map(jnp.asarray, tree["caches"])
+        self.slots = [None if u is None else _Resident(int(u))
+                      for u in meta["slots"]]
+        self._tokens = {int(u): [int(t) for t in v]
+                        for u, v in meta["tokens"].items()}
+        self._prompts = {int(u): np.asarray(v, np.int64)
+                         for u, v in meta["prompts"].items()}
+        self.prefill_tokens = int(meta["prefill_tokens"])
+        self.prefill_tokens_computed = int(meta["prefill_tokens_computed"])
+        self.pool.load_state(meta["pool"])
+        self.cache.load_state(meta["cache"])
+        if self.scfg.paged and not self.is_ssm:
+            self.manager.load_state(meta["manager"])
+
     # -- fork ----------------------------------------------------------------
 
     def fork(self, uid: int, new_uid: int) -> int:

@@ -46,6 +46,11 @@ class Request:
     tag: Optional[str] = None        # free-form class label for stats
     spec_k: Optional[int] = None     # speculative-decode proposal budget
     #                                  (0 disables; None = executor default)
+    timeout: Optional[float] = None  # hard per-request budget in seconds
+    #                                  from submit; the engine fails the
+    #                                  request with RequestTimeout past it
+    retries: int = 0                 # failures charged so far (engine-
+    #                                  managed; capped by FaultPolicy)
     seq: int = 0                     # global submission-order tiebreaker
     submit_t: float = 0.0
     schedule_t: Optional[float] = None
@@ -128,13 +133,25 @@ class RequestHandle:
 
     # -- control ------------------------------------------------------------
 
-    def result(self, max_steps: int = 100_000) -> Any:
-        """The request's output, driving the engine until it completes."""
+    def result(self, max_steps: int = 100_000,
+               timeout: Optional[float] = None) -> Any:
+        """The request's output, driving the engine until it completes.
+
+        ``timeout`` bounds the wall-clock (engine-clock) wait: a wedged
+        or quarantined model then raises :class:`TimeoutError` here
+        instead of driving the engine forever.
+        """
         req = self._request
+        deadline = (None if timeout is None
+                    else self._engine.clock() + timeout)
         for _ in range(max_steps):
             if req.status not in (RequestStatus.QUEUED,
                                   RequestStatus.RUNNING):
                 break
+            if deadline is not None and self._engine.clock() >= deadline:
+                raise TimeoutError(
+                    f"request {req.uid} still {req.status.value} after "
+                    f"result(timeout={timeout})")
             if not self._engine.step():
                 raise RuntimeError(
                     f"request {req.uid} did not complete: engine made no "

@@ -49,6 +49,15 @@ class Scheduler:
         """Pull a request back out (cancellation before admission)."""
         return self._queued.pop(uid, None)
 
+    def drain(self, model: str) -> list[Request]:
+        """Pull every queued request of one model out, in submission
+        order (quarantine: the engine reroutes or fails them)."""
+        out = sorted((r for r in self._queued.values()
+                      if r.model == model), key=lambda r: r.seq)
+        for r in out:
+            del self._queued[r.uid]
+        return out
+
     def sort_key(self, request: Request, now: float):
         raise NotImplementedError
 

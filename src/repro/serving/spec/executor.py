@@ -108,6 +108,17 @@ class SpecExecutor(LLMExecutor):
         self._spec_k[new_uid] = self._spec_k.get(uid)
         return dst
 
+    def evict(self, uid: int) -> bool:
+        found = super().evict(uid)       # _release override frees draft
+        self._spec_k.pop(uid, None)
+        return found
+
+    def snapshot(self):
+        raise NotImplementedError(
+            "SpecExecutor does not support serving-state snapshots yet: "
+            "the draft worker's state is not checkpointed.  Serve the "
+            "model on a plain LLMExecutor to snapshot/restore.")
+
     def free_capacity(self) -> int:
         free_slots = sum(r is None for r in self.slots)
         per_seq = self.draft.blocks_per_admit()

@@ -58,3 +58,29 @@ def test_elastic_restore_across_meshes():
                        cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     assert "ELASTIC_OK" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
+
+
+def test_trit_checkpoint_roundtrips_odd_sizes(tmp_path):
+    """int8 ternary leaves whose size is not a multiple of 5 still take
+    the trit5 packed path: the tail is zero-padded, the pad is recorded
+    in the manifest, and restore strips it bit-exactly."""
+    import json
+
+    import numpy as np
+
+    from repro import checkpoint as ckpt
+
+    rng = np.random.default_rng(3)
+    tree = {"a": rng.integers(-1, 2, size=(7,)).astype(np.int8),
+            "b": rng.integers(-1, 2, size=(3, 11)).astype(np.int8),
+            "c": rng.integers(-1, 2, size=(5, 4)).astype(np.int8)}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    with open(os.path.join(path, "manifest.json")) as f:
+        leaves = {e["path"]: e for e in json.load(f)["leaves"]}
+    assert all(e["encoding"] == "trit5" for e in leaves.values())
+    assert leaves["a"]["pad"] == 3 and leaves["b"]["pad"] == 2
+    assert "pad" not in leaves["c"]              # already a multiple of 5
+    out, _ = ckpt.restore(str(tmp_path), tree)
+    for k in tree:
+        assert out[k].dtype == np.int8
+        np.testing.assert_array_equal(out[k], tree[k])

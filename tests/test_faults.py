@@ -1,0 +1,483 @@
+"""Fault injection + engine recovery (`repro.serving.faults`).
+
+Deterministic fault plans, the FaultyExecutor boundary, and every engine
+recovery path: retry with backoff, poison-batch bisection, output
+guarding, per-request timeouts, load shedding, graceful degradation,
+quarantine with fallback rerouting, and the elastic serving-state
+snapshot (kill an engine mid-decode, restore, finish bit-identically).
+
+Engine-logic tests run on fake executors and a fake clock (the engine's
+``sleep=`` is injected to advance it), so no test here waits on real
+backoff.  The LLM snapshot test at the bottom uses a real smoke-sized
+model, mirroring tests/test_paged_state.py.
+"""
+
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving import (CutieEngine, DeviceLost, ExecutionReport,
+                           Executor, FaultPlan, FaultPolicy, FaultyExecutor,
+                           LoadShedError, ModelQuarantinedError,
+                           PoisonedRequestError, RequestStatus,
+                           RequestTimeout, TransientFault)
+from repro.serving.faults import FAULT_KINDS
+
+
+class _Clock:
+    """Fake monotonic clock; the engine's sleep= advances it."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += max(float(s), 0.0)
+
+
+class _Ticking(_Clock):
+    """Advances a little on every read (for wall-clock-bounded waits)."""
+
+    def __call__(self):
+        self.t += 0.01
+        return self.t
+
+
+class _Echo(Executor):
+    """One-shot fake: result == value; ``script(call, reqs)`` may raise."""
+
+    def __init__(self, capacity=4, script=None):
+        self.capacity = capacity
+        self.script = script
+        self.calls = 0
+
+    def free_capacity(self):
+        return self.capacity
+
+    def execute(self, requests):
+        call = self.calls
+        self.calls += 1
+        if self.script is not None:
+            self.script(call, requests)
+        return ExecutionReport(
+            [(r.uid, np.asarray(r.value)) for r in requests],
+            len(requests), max(len(requests), 1))
+
+
+def _engine(policy=None, scheduler="fcfs", clock=None):
+    clk = clock or _Clock()
+    eng = CutieEngine(scheduler, clock=clk, sleep=clk.sleep, policy=policy)
+    return eng, clk
+
+
+def _poison_seed(rate=0.5, bad="bad", good="good"):
+    """A seed under which tag ``bad`` is poison and ``good`` is not."""
+    for s in range(1000):
+        plan = FaultPlan(seed=s, poison_rate=rate)
+        if plan.poisoned(SimpleNamespace(tag=bad)) and \
+                not plan.poisoned(SimpleNamespace(tag=good)):
+            return s
+    raise AssertionError("no seed found")
+
+
+# ---------------------------------------------------------------------------
+# the fault plan: deterministic, O(1), validated
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    def mk():
+        return FaultPlan(seed=11, raise_rate=0.2, slow_rate=0.15,
+                         nan_rate=0.15, poison_rate=0.25,
+                         device_loss_at=40, device_loss_calls=3)
+
+    a, b = mk(), mk()
+    sched = a.schedule(120)
+    assert sched == b.schedule(120)              # cross-instance identical
+    assert sched[40:43] == ["device_loss"] * 3   # the loss window
+    assert {s for s in sched if s} >= {"raise", "slow", "nan"}
+    # counter-indexed draws: query order is irrelevant (O(1) memory)
+    assert [a.fault_for(i) for i in (77, 3, 50)] == \
+        [sched[77], sched[3], sched[50]]
+    # poison keys on the tag when set, so uid assignment is irrelevant
+    assert a.poisoned(SimpleNamespace(tag="t1", uid=1)) == \
+        b.poisoned(SimpleNamespace(tag="t1", uid=999))
+    verdicts = [a.poisoned(SimpleNamespace(tag=f"i{k}", uid=k))
+                for k in range(40)]
+    assert any(verdicts) and not all(verdicts)
+    assert set(sched) <= set(FAULT_KINDS) | {None}
+
+
+def test_fault_plan_start_after_and_validation():
+    plan = FaultPlan(seed=0, raise_rate=1.0, start_after=5)
+    assert plan.schedule(5) == [None] * 5        # warmup runs clean
+    assert plan.fault_for(5) == "raise"
+    with pytest.raises(ValueError, match="sum"):
+        FaultPlan(raise_rate=0.7, slow_rate=0.5)
+    with pytest.raises(ValueError, match="poison_rate"):
+        FaultPlan(poison_rate=1.5)
+    assert not FaultPlan(poison_rate=0.0).poisoned(SimpleNamespace(tag="x"))
+
+
+def test_faulty_executor_injects_before_inner_and_delegates():
+    inner = _Echo(capacity=3)
+    fx = FaultyExecutor(inner, FaultPlan(device_loss_at=0,
+                                         device_loss_calls=1))
+    req = SimpleNamespace(uid=1, value=np.arange(2), tag=None)
+    with pytest.raises(DeviceLost):
+        fx.execute([req])
+    assert inner.calls == 0                      # raised pre-inner-call
+    rep = fx.execute([req])                      # past the loss window
+    assert inner.calls == 1 and rep.completions[0][0] == 1
+    assert fx.free_capacity() == 3               # delegation
+    assert fx.injected["device_loss"] == 1
+    assert fx.extra_stats()["faults_injected"]["device_loss"] == 1
+
+
+def test_faulty_executor_nan_corrupts_array_completions():
+    fx = FaultyExecutor(_Echo(), FaultPlan(nan_rate=1.0))
+    rep = fx.execute([SimpleNamespace(uid=7, value=np.arange(4), tag=None)])
+    uid, res = rep.completions[0]
+    assert uid == 7 and np.isnan(res).all()
+    assert fx.injected["nan"] == 1
+
+
+def test_faulty_executor_slow_uses_injected_sleeper():
+    slept = []
+    fx = FaultyExecutor(_Echo(), FaultPlan(slow_rate=1.0, slow_s=0.5),
+                        sleeper=slept.append)
+    fx.execute([SimpleNamespace(uid=1, value=np.arange(2), tag=None)])
+    assert slept == [0.5]
+
+
+# ---------------------------------------------------------------------------
+# retry + bisection + output guard
+# ---------------------------------------------------------------------------
+
+
+def test_transient_failures_retry_with_backoff_then_succeed():
+    eng, clk = _engine(policy=FaultPolicy(backoff_base=0.01))
+
+    def flaky(call, reqs):
+        if call < 2:
+            raise TransientFault("flaky link")
+
+    eng.register("m", _Echo(script=flaky))
+    h = eng.submit(np.arange(4), model="m")
+    np.testing.assert_array_equal(h.result(), np.arange(4))
+    assert h.request.retries == 2
+    assert eng.stats()["faults"]["n_retries"] == 2
+    assert clk.t >= 0.01 + 0.02                  # backoff actually waited
+
+
+def test_retry_budget_exhausts_to_failed_handle():
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=None))
+
+    def always(call, reqs):
+        raise TransientFault("hard down")
+
+    eng.register("m", _Echo(script=always))
+    h = eng.submit(np.arange(2), model="m")
+    with pytest.raises(TransientFault):
+        h.result()
+    assert h.status is RequestStatus.FAILED
+    assert h.request.retries == eng.policy.max_retries + 1
+
+
+def test_poison_request_does_not_fail_batchmates():
+    """Satellite regression: one poison request in a batch of two fails
+    alone; the compliant batchmate completes with the right answer."""
+    seed = _poison_seed()
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=None))
+    eng.register("m", FaultyExecutor(
+        _Echo(capacity=2), FaultPlan(seed=seed, poison_rate=0.5)))
+    good = eng.submit(np.arange(3), model="m", tag="good")
+    bad = eng.submit(-np.arange(3), model="m", tag="bad")
+    eng.run()
+    assert good.status is RequestStatus.DONE
+    np.testing.assert_array_equal(good.request.result, np.arange(3))
+    assert bad.status is RequestStatus.FAILED
+    with pytest.raises(PoisonedRequestError):
+        bad.result()
+
+
+def test_poisoned_request_cannot_starve_compliant_traffic():
+    """The poison request is re-driven at most max_retries+1 times, and
+    compliant traffic keeps completing while it is retried."""
+    seed = _poison_seed()
+    pol = FaultPolicy(backoff_base=0.0, quarantine_after=None)
+    eng, _ = _engine(policy=pol)
+    fx = FaultyExecutor(_Echo(capacity=1),
+                        FaultPlan(seed=seed, poison_rate=0.5))
+    eng.register("m", fx)
+    bad = eng.submit(np.arange(2), model="m", tag="bad")
+    goods = [eng.submit(np.full(2, i), model="m", tag="good")
+             for i in range(5)]
+    eng.run()
+    assert all(g.status is RequestStatus.DONE for g in goods)
+    assert bad.status is RequestStatus.FAILED
+    assert fx.injected["poison"] == pol.max_retries + 1   # bounded re-drive
+
+
+def test_output_guard_retries_nan_results():
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=None))
+
+    class _NaNOnce(_Echo):
+        def execute(self, requests):
+            rep = super().execute(requests)
+            if self.calls == 1:
+                rep.completions = [
+                    (u, np.full(3, np.nan, np.float32))
+                    for u, _ in rep.completions]
+            return rep
+
+    eng.register("m", _NaNOnce())
+    h = eng.submit(np.arange(3), model="m")
+    np.testing.assert_array_equal(h.result(), np.arange(3))
+    assert h.request.retries == 1
+    assert eng.stats()["faults"]["n_retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# timeouts
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_timeout_fails_queued_request():
+    eng, clk = _engine()
+    eng.register("m", _Echo(capacity=0))         # never admits
+    h = eng.submit(np.arange(2), model="m", timeout=1.0)
+    clk.t += 2.0
+    eng.step()
+    assert h.status is RequestStatus.FAILED
+    with pytest.raises(RequestTimeout):
+        h.result()
+    assert eng.stats()["faults"]["n_timed_out"] == 1
+
+
+def test_handle_result_timeout_bounds_the_wait():
+    class _Resident(Executor):
+        _res = False
+
+        def free_capacity(self):
+            return 1
+
+        def has_resident(self):
+            return self._res
+
+        def execute(self, requests):
+            if requests:
+                self._res = True
+            return ExecutionReport([], len(requests),
+                                   max(len(requests), 1))
+
+    eng, _ = _engine(clock=_Ticking())
+    eng.register("m", _Resident())
+    h = eng.submit(np.arange(2), model="m")
+    with pytest.raises(TimeoutError, match="result"):
+        h.result(timeout=0.5)
+    assert h.status is RequestStatus.RUNNING     # not failed, just unwaited
+
+
+# ---------------------------------------------------------------------------
+# admission control: shedding + degradation
+# ---------------------------------------------------------------------------
+
+
+def test_load_shedding_at_queue_depth_cap():
+    eng, _ = _engine(policy=FaultPolicy(max_queue_depth=2))
+    eng.register("m", _Echo(capacity=1))
+    h1 = eng.submit(np.arange(2), model="m")
+    h2 = eng.submit(np.arange(2), model="m")
+    with pytest.raises(LoadShedError, match="queue depth"):
+        eng.submit(np.arange(2), model="m")
+    assert eng.stats()["faults"]["n_shed"] == 1
+    eng.run()
+    assert h1.status is RequestStatus.DONE and \
+        h2.status is RequestStatus.DONE          # admitted work unharmed
+
+
+def test_deadline_aware_shedding_uses_batch_time_evidence():
+    eng, clk = _engine(policy=FaultPolicy(shed_on_deadline=True))
+    eng.register("m", _Echo(capacity=1,
+                            script=lambda c, r: clk.sleep(1.0)))
+    for _ in range(3):                           # build timing evidence
+        eng.submit(np.arange(2), model="m").result()
+    with pytest.raises(LoadShedError, match="deadline"):
+        eng.submit(np.arange(2), model="m", deadline=0.5)
+    eng.submit(np.arange(2), model="m", deadline=10.0).result()  # meets SLA
+
+
+def test_queue_pressure_degrades_speculation_before_shedding():
+    class _Speccy(_Echo):
+        spec = object()                          # spec-capable marker
+
+    eng, _ = _engine(policy=FaultPolicy(pressure_queue_depth=1))
+    eng.register("m", _Speccy(capacity=1))
+    first = eng.submit(np.arange(2), model="m", spec_k=4)
+    second = eng.submit(np.arange(2), model="m", spec_k=4)
+    assert first.request.spec_k == 4             # below pressure: untouched
+    assert second.request.spec_k == 0            # degraded, not shed
+    assert eng.stats()["faults"]["n_degraded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# quarantine + fallback
+# ---------------------------------------------------------------------------
+
+
+def _boom(call, reqs):
+    raise RuntimeError("wedged")
+
+
+def test_quarantine_reroutes_all_traffic_to_fallback():
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=2))
+    eng.register("backup", _Echo())
+    eng.register("bad", _Echo(script=_boom), fallback="backup")
+    a = eng.submit(np.arange(2), model="bad")
+    b = eng.submit(np.arange(3), model="bad")
+    eng.run()
+    # both victims completed on the fallback with the right answers
+    assert a.status is RequestStatus.DONE
+    assert b.status is RequestStatus.DONE
+    np.testing.assert_array_equal(a.request.result, np.arange(2))
+    np.testing.assert_array_equal(b.request.result, np.arange(3))
+    assert eng.quarantined == ["bad"]
+    s = eng.stats()["faults"]
+    assert s["n_quarantines"] == 1 and s["n_rerouted"] >= 2
+    # new submits reroute at admission while quarantined
+    c = eng.submit(np.arange(4), model="bad")
+    assert c.request.model == "backup"
+    eng.run()
+    assert c.status is RequestStatus.DONE
+    # manual reinstatement
+    assert eng.reinstate("bad") is True
+    assert eng.quarantined == []
+
+
+def test_quarantine_without_fallback_fails_and_refuses_submits():
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=1))
+    eng.register("bad", _Echo(script=_boom))
+    h = eng.submit(np.arange(2), model="bad")
+    eng.run()
+    assert h.status is RequestStatus.FAILED
+    with pytest.raises(ModelQuarantinedError):
+        h.result()
+    with pytest.raises(ModelQuarantinedError, match="quarantined"):
+        eng.submit(np.arange(2), model="bad")
+
+
+def test_quarantine_cooldown_auto_reinstates():
+    eng, clk = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                          quarantine_after=1,
+                                          quarantine_cooldown=5.0))
+
+    def first_only(call, reqs):
+        if call == 0:
+            raise RuntimeError("transient wedge")
+
+    eng.register("bad", _Echo(script=first_only))
+    h = eng.submit(np.arange(2), model="bad")
+    eng.run()
+    assert h.status is RequestStatus.FAILED and eng.quarantined == ["bad"]
+    clk.t += 6.0
+    eng.step()
+    assert eng.quarantined == []
+    h2 = eng.submit(np.arange(3), model="bad")   # healthy again
+    np.testing.assert_array_equal(h2.result(), np.arange(3))
+
+
+def test_hot_swap_reinstates_quarantined_model():
+    eng, _ = _engine(policy=FaultPolicy(backoff_base=0.0,
+                                        quarantine_after=1))
+    eng.register("m", _Echo(script=_boom))
+    eng.submit(np.arange(2), model="m")
+    eng.run()
+    assert eng.quarantined == ["m"]
+    eng.register("m", _Echo())                   # swap in a healthy model
+    assert eng.quarantined == []
+    h = eng.submit(np.arange(2), model="m")
+    np.testing.assert_array_equal(h.result(), np.arange(2))
+
+
+# ---------------------------------------------------------------------------
+# elastic serving-state snapshot (real smoke-sized LLM)
+# ---------------------------------------------------------------------------
+
+
+def test_serving_state_snapshot_restores_bit_identically(tmp_path):
+    import jax
+
+    import repro.configs as configs
+    from repro.models import transformer as TF
+    from repro.models.config import reduce_for_smoke
+    from repro.serving import (LLMExecutor, ServerConfig,
+                               restore_serving_state, save_serving_state)
+
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=1)
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServerConfig(paged=True, n_slots=2, max_new_tokens=6,
+                        max_len=64, block_size=8)
+    shared = list(np.arange(20) % 50)
+    prompts = [np.array(shared + [100 + i, i]) for i in range(3)]
+
+    def fresh():
+        eng = CutieEngine("fcfs")
+        eng.register("llm", LLMExecutor(params, cfg, scfg))
+        return eng
+
+    ref_eng = fresh()
+    for p in prompts:
+        ref_eng.submit(p, model="llm")
+    ref = ref_eng.run()                          # uninterrupted reference
+
+    eng = fresh()
+    for p in prompts:
+        eng.submit(p, model="llm")
+    for _ in range(3):                           # "kill" mid-decode
+        eng.step()
+    live = [r for r in eng._requests.values()
+            if r.status in (RequestStatus.QUEUED, RequestStatus.RUNNING)]
+    assert live                                  # genuinely interrupted
+    save_serving_state(eng, str(tmp_path / "ck"))
+
+    eng2 = fresh()
+    handles = restore_serving_state(eng2, str(tmp_path / "ck"))
+    assert sorted(handles) == sorted(r.uid for r in live)
+    eng2.run()
+    for old_uid, h in handles.items():
+        assert h.status is RequestStatus.DONE
+        assert h.request.result == ref[old_uid]  # token-for-token
+
+
+def test_snapshot_requires_matching_models(tmp_path):
+    import jax
+
+    import repro.configs as configs
+    from repro.models import transformer as TF
+    from repro.models.config import reduce_for_smoke
+    from repro.serving import (LLMExecutor, ServerConfig,
+                               restore_serving_state, save_serving_state)
+
+    cfg = reduce_for_smoke(configs.get("llama3_2_1b")).replace(n_layers=1)
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServerConfig(paged=True, n_slots=2, max_new_tokens=2,
+                        max_len=32, block_size=8)
+    eng = CutieEngine("fcfs")
+    eng.register("llm", LLMExecutor(params, cfg, scfg))
+    eng.submit(np.arange(8), model="llm")
+    eng.step()
+    save_serving_state(eng, str(tmp_path / "ck"))
+
+    other = CutieEngine("fcfs")
+    other.register("renamed", LLMExecutor(params, cfg, scfg))
+    with pytest.raises(ValueError, match="do not match"):
+        restore_serving_state(other, str(tmp_path / "ck"))

@@ -173,15 +173,23 @@ def test_hot_swap_with_queued_traffic_executes_on_new_model():
 
 
 def test_failed_batch_marks_requests_failed():
-    eng = CutieEngine("fcfs")
+    """An executor exception never propagates out of step(): the engine
+    retries the request to its budget, then surfaces the error at the
+    handle."""
+    from repro.serving import FaultPolicy
+
+    eng = CutieEngine("fcfs", policy=FaultPolicy(backoff_base=0.0,
+                                                 quarantine_after=None))
     eng.register("m", _pipe(), head=lambda feats: 1 / 0)
     rng = np.random.default_rng(2)
     h = eng.submit(_img(rng), model="m")
+    eng.step()                                   # does not raise
+    assert h.status is not RequestStatus.DONE
     with pytest.raises(ZeroDivisionError):
-        eng.step()
+        h.result()                               # drives retries, then fails
     assert h.status is RequestStatus.FAILED
-    with pytest.raises(ZeroDivisionError):
-        h.result()
+    assert h.request.retries == eng.policy.max_retries + 1
+    assert eng.stats()["faults"]["n_retries"] == eng.policy.max_retries
 
 
 def test_evict_completed_bounds_retention():
